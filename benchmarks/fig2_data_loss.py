@@ -1,0 +1,113 @@
+"""Paper Fig. 2: data loss inside a layer destroys accuracy; CDC recovers it.
+
+We train two small classifiers on a synthetic 10-class task (a LeNet-scale
+MLP and a deeper/wider one, mirroring the paper's LeNet-5 vs Inception-v3
+sensitivity contrast), then erase p% of the first hidden layer's output
+split across T=4 devices — (a) uncoded: erased activations are zeros;
+(b) CDC: the erased shard is reconstructed from the parity shard. The paper's
+claim: >70% loss is destructive; CDC holds accuracy at the fault-free level.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CodedDenseSpec, CodeSpec, coded_matmul, \
+    make_parity_weights
+
+
+def _make_task(key, n=4096, d=64, classes=10):
+    kw, kx = jax.random.split(key)
+    wstar = jax.random.normal(kw, (d, classes))
+    x = jax.random.normal(kx, (n, d))
+    y = jnp.argmax(x @ wstar + 0.3 * jax.random.normal(kw, (n, classes)),
+                   axis=-1)
+    return x, y
+
+
+def _train_mlp(key, x, y, hidden, classes=10, steps=300, lr=0.1):
+    dims = [x.shape[1]] + hidden + [classes]
+    ks = jax.random.split(key, len(dims))
+    params = [(jax.random.normal(ks[i], (dims[i], dims[i + 1]))
+               / np.sqrt(dims[i]), jnp.zeros(dims[i + 1]))
+              for i in range(len(dims) - 1)]
+
+    def fwd(params, x):
+        h = x
+        for w, b in params[:-1]:
+            h = jax.nn.relu(h @ w + b)
+        w, b = params[-1]
+        return h @ w + b
+
+    def loss(params):
+        lg = fwd(params, x)
+        return -jnp.take_along_axis(jax.nn.log_softmax(lg), y[:, None],
+                                    1).mean()
+
+    @jax.jit
+    def step(params):
+        g = jax.grad(loss)(params)
+        return jax.tree.map(lambda p, g: p - lr * g, params, g)
+
+    for _ in range(steps):
+        params = step(params)
+    return params, fwd
+
+
+def _acc_with_loss(params, x, y, T, frac_lost, coded, key):
+    """Evaluate with `frac_lost` of the first hidden layer erased."""
+    (w1, b1), rest = params[0], params[1:]
+    spec = CodedDenseSpec(CodeSpec(T, 1), layout="dedicated")
+    w_cdc = make_parity_weights(w1, spec)
+    m = w1.shape[1]
+    n_lost = int(frac_lost * T)
+    valid = jnp.ones(T, bool)
+    if n_lost:
+        dead = jax.random.choice(key, T, (min(n_lost, T - 1),),
+                                 replace=False)
+        valid = valid.at[dead].set(False)
+    if coded:
+        h = coded_matmul(x, w1, w_cdc, spec, valid) + b1
+    else:
+        # uncoded: the lost shard's outputs are simply zero (paper Fig. 2)
+        h = coded_matmul(x, w1, None, spec) + 0.0
+        mask = jnp.repeat(valid, m // T)
+        h = h * mask[None, :] + 0.0
+        h = h + b1 * mask[None, :]
+    h = jax.nn.relu(h)
+    for w, b in rest[:-1]:
+        h = jax.nn.relu(h @ w + b)
+    w, b = rest[-1]
+    pred = jnp.argmax(h @ w + b, -1)
+    return float((pred == y).mean())
+
+
+def run() -> list[dict]:
+    key = jax.random.PRNGKey(0)
+    x, y = _make_task(key)
+    rows = []
+    for name, hidden in [("mlp-lenet-scale", [128, 64]),
+                         ("mlp-deep", [256, 256, 128, 64])]:
+        params, _ = _train_mlp(jax.random.PRNGKey(1), x, y, hidden)
+        T = 4
+        base = _acc_with_loss(params, x, y, T, 0.0, False,
+                              jax.random.PRNGKey(2))
+        for frac in (0.25, 0.5, 0.75):
+            a_plain = _acc_with_loss(params, x, y, T, frac, False,
+                                     jax.random.PRNGKey(3))
+            a_cdc = _acc_with_loss(params, x, y, T, 0.25, True,
+                                   jax.random.PRNGKey(3))
+            rows.append({
+                "model": name, "loss_frac": frac,
+                "acc_intact": base, "acc_uncoded": a_plain,
+                "acc_cdc_one_shard_lost": a_cdc,
+                "drop_uncoded": base - a_plain,
+                "drop_cdc": base - a_cdc,
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

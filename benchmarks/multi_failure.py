@@ -1,0 +1,53 @@
+"""Paper §7 / Fig. 18 (extended beyond the paper): tolerating multiple
+failures with MDS parity shards.
+
+The paper sketches partial-sum overlaps and notes full correction needs
+Hamming-style codes; our Vandermonde MDS generalization recovers ANY
+r-subset of erasures exactly. Reports recovery error and the hardware cost
+(T+r)/T at each tolerance level — still constant-per-layer vs. the linear
+cost of (r+1)-modular redundancy.
+"""
+from __future__ import annotations
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CodedDenseSpec, CodeSpec, coded_matmul, \
+    make_parity_weights
+
+
+def run(T=8, k=128, m=None) -> list[dict]:
+    m = m or T * T * 4
+    rows = []
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (16, k), jnp.float32)
+    w = jax.random.normal(kw, (k, m), jnp.float32) / k ** 0.5
+    ref = x @ w
+    for r in (1, 2, 3, 4):
+        spec = CodedDenseSpec(CodeSpec(T, r), layout="dedicated")
+        w_cdc = make_parity_weights(w, spec)
+        worst = 0.0
+        n_pat = 0
+        for dead in itertools.combinations(range(T), r):
+            valid = jnp.ones(T, bool).at[jnp.asarray(dead)].set(False)
+            y = coded_matmul(x, w, w_cdc, spec, valid)
+            worst = max(worst, float(jnp.abs(y - ref).max()))
+            n_pat += 1
+            if n_pat >= 35:
+                break
+        rows.append({
+            "T": T, "r": r, "tolerates": r,
+            "hw_cost_cdc": round((T + r) / T, 3),
+            "hw_cost_modular": r + 1,
+            "worst_abs_err_fp32": f"{worst:.2e}",
+            "patterns_checked": n_pat,
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

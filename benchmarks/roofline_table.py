@@ -1,0 +1,54 @@
+"""Render the roofline table from the dry-run results JSON (EXPERIMENTS.md
+§Roofline source of truth)."""
+from __future__ import annotations
+
+import json
+import os
+
+DEFAULT = "/root/repo/results/dryrun.json"
+OPT = "/root/repo/results/dryrun_opt.json"
+
+
+def run(path: str = DEFAULT, opt_path: str = OPT) -> list[dict]:
+    if not os.path.exists(path):
+        return [{"note": f"no dry-run results at {path}; run "
+                 "`python -m repro.launch.dryrun --all`"}]
+    with open(path) as f:
+        results = json.load(f)
+    opt = {}
+    if os.path.exists(opt_path):
+        with open(opt_path) as f:
+            opt = json.load(f)
+    rows = []
+    for key, rec in sorted(results.items()):
+        if rec.get("status") == "skip":
+            rows.append({"cell": key, "status": "skip",
+                         "why": rec["why"][:60]})
+            continue
+        if rec.get("status") != "ok":
+            rows.append({"cell": key, "status": rec.get("status")})
+            continue
+        rl = rec["roofline"]
+        row = {
+            "cell": key,
+            "compute_s": f"{rl['compute_s']:.3e}",
+            "memory_s": f"{rl['memory_s']:.3e}",
+            "collective_s": f"{rl['collective_s']:.3e}",
+            "dominant": rl["dominant"],
+            "useful": f"{rl['useful_ratio']:.2f}",
+            "roofline_frac": f"{rl['roofline_fraction']:.3f}",
+            "compile_s": rec["compile_s"],
+        }
+        o = opt.get(key)
+        if o and o.get("status") == "ok":
+            ro = o["roofline"]
+            row["opt_memory_s"] = f"{ro['memory_s']:.3e}"
+            row["opt_collective_s"] = f"{ro['collective_s']:.3e}"
+            row["opt_frac"] = f"{ro['roofline_fraction']:.3f}"
+        rows.append(row)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

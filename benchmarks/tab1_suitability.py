@@ -1,0 +1,62 @@
+"""Paper Table 1: distribution techniques suitable for CDC robustness.
+
+The predicate (divides weights & output, not input) is implemented in
+repro.core.policy and verified empirically here: for each split method we
+attempt a coded recovery and check whether parity could have been computed
+OFFLINE (input-independent) — the paper's suitability criterion.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (CodedDenseSpec, CodeSpec, coded_matmul,
+                        make_parity_weights, suitability_table)
+
+
+def _empirical_output_split() -> bool:
+    """Output split: offline parity => recovery works for any input."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    w = jax.random.normal(kw, (32, 64))
+    spec = CodedDenseSpec(CodeSpec(4, 1), layout="dedicated")
+    w_cdc = make_parity_weights(w, spec)  # offline: no x involved
+    ok = True
+    for seed in range(3):  # inputs the encoder never saw
+        x = jax.random.normal(jax.random.PRNGKey(seed + 1), (8, 32))
+        y = coded_matmul(x, w, w_cdc, spec, jnp.ones(4, bool).at[2].set(False))
+        ok &= bool(jnp.allclose(y, x @ w, atol=1e-4))
+    return ok
+
+
+def _empirical_input_split() -> bool:
+    """Input split: partial sums share no factor — a parity device would
+    need the runtime inputs (paper Eq. 13-14). We verify no input-independent
+    parity weight W_p exists by showing the partial sums' relationship
+    changes with the input."""
+    kw = jax.random.PRNGKey(0)
+    w = jax.random.normal(kw, (32, 16))
+    w1, w2 = w[:16], w[16:]
+    ratios = []
+    for seed in range(3):
+        x = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, 32))
+        p1 = x[:, :16] @ w1
+        p2 = x[:, 16:] @ w2
+        ratios.append(float(p1[0, 0] / p2[0, 0]))
+    # ratio varies with input => no static combination reproduces p1 from p2
+    return np.std(ratios) > 1e-3
+
+
+def run() -> list[dict]:
+    rows = suitability_table()
+    emp = {"output": _empirical_output_split(),
+           "input": not _empirical_input_split()}
+    for r in rows:
+        if r["method"] in emp:
+            r["empirical_suitable"] = emp[r["method"]]
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,34 @@
+"""Beyond the paper (§7/Fig. 18): MDS parity shards tolerate r failures.
+
+Sweeps r = 1..4 on a T=8 output split; shows exact recovery for every
+r-subset of failures tried, at (T+r)/T hardware cost — the paper's sketch
+made rigorous with a totally-positive Vandermonde generator.
+
+Run:  PYTHONPATH=src python examples/multi_failure.py
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (CodedDenseSpec, CodeSpec, coded_matmul,
+                        make_parity_weights, max_decode_condition)
+
+T = 8
+kx, kw = jax.random.split(jax.random.PRNGKey(0))
+x = jax.random.normal(kx, (4, 128))
+w = jax.random.normal(kw, (128, 256)) / 12.0
+ref = x @ w
+
+for r in (1, 2, 3, 4):
+    spec = CodedDenseSpec(CodeSpec(T, r), layout="dedicated")
+    cond = max_decode_condition(spec.code)
+    w_cdc = make_parity_weights(w, spec)
+    worst = 0.0
+    for dead in itertools.islice(itertools.combinations(range(T), r), 20):
+        valid = jnp.ones(T, bool).at[jnp.asarray(dead)].set(False)
+        y = coded_matmul(x, w, w_cdc, spec, valid)
+        worst = max(worst, float(jnp.abs(y - ref).max()))
+    print(f"r={r}: tolerates any {r} failures | hw cost {(T + r) / T:.3f}x "
+          f"(vs {r + 1:.1f}x modular) | worst err {worst:.2e} "
+          f"| decode cond {cond:.1e}")

@@ -1,0 +1,45 @@
+"""Quickstart: the paper's CDC technique in 40 lines.
+
+Builds a coded output-split GEMM (paper Eq. 7/11), kills a shard, and shows
+the recovery combine reproducing the fault-free result — then the same thing
+through a whole transformer.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch, smoke_config
+from repro.core import CodedDenseSpec, CodeSpec, coded_matmul, \
+    make_parity_weights
+from repro.models import TPCtx, build
+
+# ---- 1. one coded GEMM -----------------------------------------------------
+T = 4                                   # output-split across 4 devices
+spec = CodedDenseSpec(CodeSpec(n_shards=T, n_parity=2))  # folded layout
+kx, kw = jax.random.split(jax.random.PRNGKey(0))
+x = jax.random.normal(kx, (8, 256))
+w = jax.random.normal(kw, (256, 512)) / 16.0
+
+w_cdc = make_parity_weights(w, spec)    # OFFLINE (paper §5.2): no inputs
+ref = x @ w
+
+dead = jnp.ones(T, bool).at[2].set(False)       # device 2 dies
+y = coded_matmul(x, w, w_cdc, spec, dead)       # recovery fused in
+print("1. coded GEMM: max |recovered - fault-free| =",
+      float(jnp.abs(y - ref).max()))
+
+# ---- 2. a whole model under failure ----------------------------------------
+cfg = smoke_config(get_arch("granite-3-8b"))
+model = build(cfg, TPCtx(tp=T, mode="coded", code_r=2))
+params = model.init(jax.random.PRNGKey(1))
+batch = model.dummy_batch(jax.random.PRNGKey(2), 2, 16)
+
+logits_ok = model.forward(params, batch, jnp.ones(T, bool))
+logits_dead = model.forward(params, batch, dead)
+print("2. full model: max logit deviation under a dead shard =",
+      float(jnp.abs(logits_ok - logits_dead).max()))
+
+# ---- 3. the cost structure (paper §5.2 benefit 1) ---------------------------
+print(f"3. hardware cost: CDC {(T + 1) / T:.2f}x vs 2MR 2.00x "
+      f"(constant vs linear in devices)")

@@ -1,0 +1,38 @@
+"""Serve a small model with batched requests + mid-request failure.
+
+Reproduces the paper's Case Study II operationally: a shard dies while a
+batch of requests is generating; the coded engine recovers inside the step
+and the generated tokens are IDENTICAL to the fault-free run ("the system
+never loses a request", §6).
+
+Run:  PYTHONPATH=src python examples/serve_cdc.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, smoke_config
+from repro.core.failure import StragglerModel
+from repro.models import TPCtx, build
+from repro.serve import ServeConfig, ServingEngine
+
+cfg = smoke_config(get_arch("h2o-danube-1.8b"))
+ctx = TPCtx(tp=4, mode="coded", code_r=2, moe_capacity=0)
+model = build(cfg, ctx)
+params = model.init(jax.random.PRNGKey(0))
+scfg = ServeConfig(max_len=64, batch=4, cache_dtype=jnp.float32)
+
+prompts = model.dummy_batch(jax.random.PRNGKey(1), 4, 12)
+
+eng_ok = ServingEngine(model, params, scfg)
+toks_ok = eng_ok.generate(prompts, 12)
+
+eng_fail = ServingEngine(model, params, scfg)
+toks_fail = eng_fail.generate(prompts, 12, fail_at={3: 1})  # shard 1 dies
+
+print("fault-free tokens[0]:", toks_ok[0].tolist())
+print("with-failure tokens[0]:", toks_fail[0].tolist())
+print("identical:", bool(np.array_equal(toks_ok, toks_fail)))
+print("metrics:", eng_fail.metrics)
+print("straggler first-T-of-(T+r):",
+      eng_fail.straggler_latency(StragglerModel(), n_trials=5000))

@@ -1,0 +1,49 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+Uses the xlstm-125m assigned architecture (closest to 100M) at full config
+but short sequence on CPU; pass --full-seq on a real fleet. Checkpoints,
+auto-resumes, and logs loss. ~15 min on this container with default args.
+
+Run:  PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.data import DataConfig
+from repro.models import TPCtx, build
+from repro.optim import AdamWConfig
+from repro.train import Trainer, TrainerConfig, TrainConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = get_arch("xlstm-125m")  # 12L x 768d: ~125M params, full config
+    model = build(cfg, TPCtx())
+    trainer = Trainer(
+        model,
+        TrainerConfig(steps=args.steps, ckpt_dir=args.ckpt,
+                      ckpt_every=50, log_every=10),
+        AdamWConfig(lr=1e-3, total_steps=args.steps, warmup_steps=20),
+        TrainConfig(microbatches=1, remat="none"),
+        DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                   global_batch=args.batch),
+    )
+    out = trainer.run()
+    print("step,loss")
+    for s, l in out["losses"]:
+        print(f"{s},{l:.4f}")
+    first, last = out["losses"][0][1], out["losses"][-1][1]
+    print(f"# loss {first:.3f} -> {last:.3f} over {args.steps} steps "
+          f"({out['wall_s']:.0f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,183 @@
+"""Sharded, atomic, async checkpointing with elastic re-mesh on restore.
+
+Design (mirrors the paper's operational story at datacenter scale): the
+paper pre-loads ALL weights + task files on every RPi so any device can take
+over any role after a failure (§6 "Task Creation & Assignment"). Here the
+checkpoint stores GLOBAL arrays + a manifest, so a restore may land on a
+DIFFERENT mesh (fewer/more hosts — the 'pre-defined distribution file with
+fewer devices') and the restore path re-shards via NamedSharding placement.
+
+Properties:
+  * atomic: writes into step_XXXX.tmp/, fsyncs, then os.replace -> step_XXXX
+  * async: save() returns immediately; a worker thread drains a queue
+  * self-describing: manifest.json records shapes/dtypes/tree structure
+  * elastic: restore(mesh=...) places leaves under any mesh's shardings
+  * CDC-aware: parity leaves ("cdc") can be dropped on save and re-encoded
+    offline on load (encode_tree), exactly like the paper's offline prep
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SENTINEL = object()
+
+
+def _flatten(tree: Any):
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+
+    def name(p):
+        parts = []
+        for k in p:
+            if isinstance(k, jax.tree_util.DictKey):
+                parts.append(str(k.key))
+            elif isinstance(k, jax.tree_util.SequenceKey):
+                parts.append(f"#{k.idx}")
+            else:
+                parts.append(str(k))
+        return "/".join(parts)
+
+    return [(name(p), leaf) for p, leaf in paths_leaves], treedef
+
+
+def save(tree: Any, directory: str, step: int, *,
+         drop_parity: bool = True) -> str:
+    """Synchronous atomic save of a pytree of (possibly sharded) arrays."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    named, _ = _flatten(tree)
+    manifest = {"step": step, "leaves": []}
+    for name, leaf in named:
+        if drop_parity and name.endswith("/cdc"):
+            manifest["leaves"].append(
+                {"name": name, "kind": "parity"})  # re-encoded on load
+            continue
+        arr = np.asarray(jax.device_get(leaf))
+        store = arr
+        if str(arr.dtype) == "bfloat16":  # numpy can't round-trip bf16
+            store = arr.view(np.uint16)
+        fn = name.replace("/", "__") + ".npy"
+        np.save(os.path.join(tmp, fn), store)
+        manifest["leaves"].append(
+            {"name": name, "kind": "array", "file": fn,
+             "shape": list(arr.shape), "dtype": str(arr.dtype)})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(template: Any, directory: str, step: int | None = None, *,
+            mesh=None, shardings: Any = None, encode_ctx=None) -> Any:
+    """Restore into the structure of ``template`` (values replaced).
+
+    mesh/shardings: if given, leaves are device_put with those shardings —
+    this is the ELASTIC path: the same checkpoint restores onto any mesh
+    (the paper's degraded redistribution, without losing a request).
+    encode_ctx: TPCtx — recompute parity leaves offline after load.
+    """
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_name = {e["name"]: e for e in manifest["leaves"]}
+
+    named, treedef = _flatten(template)
+    shard_named = _flatten(shardings)[0] if shardings is not None else None
+    out = []
+    for i, (name, tmpl) in enumerate(named):
+        entry = by_name.get(name)
+        if entry is None or entry["kind"] == "parity":
+            out.append(tmpl)  # parity re-encoded below / missing kept
+            continue
+        arr = np.load(os.path.join(path, entry["file"]))
+        if entry["dtype"] == "bfloat16":
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        elif str(arr.dtype) != entry["dtype"]:
+            arr = arr.astype(np.dtype(entry["dtype"]))
+        if shard_named is not None:
+            leaf = jax.device_put(arr, shard_named[i][1])
+        elif mesh is not None:
+            leaf = jax.device_put(arr)
+        else:
+            leaf = jnp.asarray(arr)
+        out.append(leaf)
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    if encode_ctx is not None and encode_ctx.coded:
+        from repro.models.common import encode_tree
+        tree = encode_tree(tree, encode_ctx)
+    return tree
+
+
+class AsyncCheckpointer:
+    """Fire-and-forget background saves (training never stalls on I/O)."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._q: queue.Queue = queue.Queue(maxsize=2)
+        self._err: list[BaseException] = []
+        self._t = threading.Thread(target=self._worker, daemon=True)
+        self._t.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is _SENTINEL:
+                return
+            tree, step = item
+            try:
+                save(tree, self.directory, step)
+                self._gc()
+            except BaseException as e:  # surfaced on next save()/close()
+                self._err.append(e)
+
+    def _gc(self):
+        steps = sorted(
+            int(d.split("_")[1]) for d in os.listdir(self.directory)
+            if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def save(self, tree: Any, step: int):
+        if self._err:
+            raise self._err.pop()
+        # device_get NOW so the trainer can donate/overwrite buffers
+        host_tree = jax.tree.map(
+            lambda x: np.asarray(jax.device_get(x)), tree)
+        self._q.put((host_tree, step))
+
+    def close(self):
+        self._q.put(_SENTINEL)
+        self._t.join(timeout=300)
+        if self._err:
+            raise self._err.pop()

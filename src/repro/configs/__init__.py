@@ -1,0 +1,2 @@
+from repro.configs.base import (SHAPES, ArchConfig, ShapeSpec, all_archs,
+                                get_arch, load_all, runnable, smoke_config)

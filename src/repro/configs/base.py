@@ -1,0 +1,175 @@
+"""Architecture + shape registries for the assigned pool (40 cells).
+
+Every assigned architecture is a selectable config (``--arch <id>``); each
+arch is paired with the four LM shapes. ``train_*`` lowers ``train_step``;
+``decode_*`` / ``long_*`` lower ``serve_step`` (one token against a KV cache
+of seq_len). ``long_500k`` requires a sub-quadratic path (SWA / SSM / hybrid)
+and is a structured skip for pure full-attention archs (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                  # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0            # 0 => d_model // n_heads
+    # attention
+    attn_kind: str = "full"      # full | swa
+    window: int = 4096           # SWA window
+    rope_theta: float = 10_000.0
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    d_ff_expert: int = 0
+    # SSM / hybrid
+    ssm_kind: str = ""           # "" | mamba | xlstm
+    ssm_state: int = 0
+    slstm_every: int = 0         # xlstm: every k-th block is sLSTM (0 = none)
+    # encoder-decoder
+    encoder_layers: int = 0
+    enc_seq: int = 0             # whisper: 1500 precomputed frames (stub)
+    # misc
+    act: str = "silu"            # silu (gated) | gelu (ungated)
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # CDC (the paper's technique; toggled per run)
+    coded: bool = False
+    code_r: int = 2
+    code_layout: str = "folded"  # folded | dedicated
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch decode at 500k context? (SWA window or SSM state.)"""
+        return self.attn_kind == "swa" or bool(self.ssm_kind)
+
+    @property
+    def param_count(self) -> int:
+        """Approximate parameter count (for roofline MODEL_FLOPS)."""
+        d, hd = self.d_model, self.hd
+        attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd \
+            + self.n_heads * hd * d
+        if self.ssm_kind == "xlstm":
+            blk = 2 * d * 2 * d + 3 * (2 * d) * (2 * d) // 4  # rough
+            per_layer = blk
+        else:
+            ffn = 3 * d * self.d_ff if self.act == "silu" \
+                else 2 * d * self.d_ff
+            if self.n_experts:
+                ffe = 3 * d * self.d_ff_expert
+                ffn = self.n_experts * ffe + self.n_shared_experts * ffe \
+                    + d * self.n_experts
+            per_layer = attn + ffn
+            if self.ssm_kind == "mamba":
+                per_layer += 2 * d * 2 * d + 2 * d * self.ssm_state * 2
+        total = self.n_layers * per_layer
+        if self.is_encdec:
+            total += self.encoder_layers * per_layer + \
+                self.n_layers * attn  # cross-attention
+        total += self.vocab * d * (1 if self.tie_embeddings else 2)
+        return total
+
+    @property
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed top_k + shared)."""
+        if not self.n_experts:
+            return self.param_count
+        d = self.d_model
+        ffe = 3 * d * self.d_ff_expert
+        inactive = (self.n_experts - self.top_k) * ffe * self.n_layers
+        return self.param_count - inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+_REGISTRY: dict[str, ArchConfig] = {}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_arch(name: str) -> ArchConfig:
+    if not _REGISTRY:
+        load_all()
+    return _REGISTRY[name]
+
+
+def all_archs() -> dict[str, ArchConfig]:
+    if not _REGISTRY:
+        load_all()
+    return dict(_REGISTRY)
+
+
+def load_all() -> None:
+    """Import every config module (they self-register)."""
+    from repro.configs import (chameleon_34b, deepseek_67b,  # noqa: F401
+                               granite_3_8b, h2o_danube_1_8b,
+                               h2o_danube_3_4b, hymba_1_5b, qwen2_moe_a2_7b,
+                               qwen3_moe_235b_a22b, whisper_medium,
+                               xlstm_125m)
+
+
+def runnable(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Is (arch x shape) a real cell or a structured skip?"""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full-attention arch: no sub-quadratic path for "
+                       "524k decode (DESIGN.md §6)")
+    return True, ""
+
+
+def smoke_config(cfg: ArchConfig) -> ArchConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        n_layers=min(cfg.n_layers, 2),
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads < cfg.n_heads
+        else 4,
+        head_dim=32,
+        d_ff=256 if cfg.d_ff else 0,
+        vocab=512,
+        window=min(cfg.window, 64),
+        n_experts=min(cfg.n_experts, 8) if cfg.n_experts else 0,
+        top_k=min(cfg.top_k, 2) if cfg.top_k else 0,
+        n_shared_experts=min(cfg.n_shared_experts, 1),
+        d_ff_expert=64 if cfg.d_ff_expert else 0,
+        ssm_state=min(cfg.ssm_state, 8) if cfg.ssm_state else 0,
+        encoder_layers=min(cfg.encoder_layers, 2),
+        enc_seq=min(cfg.enc_seq, 16) if cfg.enc_seq else 0,
+        slstm_every=min(cfg.slstm_every, 2) if cfg.slstm_every else 0,
+    )

@@ -1,0 +1,22 @@
+"""repro.core -- the paper's contribution: CDC-coded model-parallel inference.
+
+Public surface:
+  CodeSpec, generator_matrix, encode_weights, decode_outputs   (coding algebra)
+  CodedDenseSpec, coded_matmul, make_parity_weights, pad_for_code (coded GEMM)
+  conv2d_gemm, coded_conv2d                                      (conv/channel split)
+  SplitMethod, TABLE_1, suitability_table                        (Table-1 policy)
+  StragglerModel, mitigation_improvement, coverage_*             (failure models)
+"""
+from repro.core.coding import (CodeSpec, decode_outputs, encode_outputs,
+                               encode_weights, generator_matrix,
+                               max_decode_condition)
+from repro.core.coded_layer import (CodedDenseSpec, coded_matmul,
+                                    decode_folded, fold_parity_slots,
+                                    folded_slot_map, make_parity_weights,
+                                    pad_for_code, unfold_parity)
+from repro.core.conv import coded_conv2d, conv2d_gemm, im2col
+from repro.core.failure import (StragglerModel, coverage_2mr,
+                                coverage_at_budget, mitigation_improvement,
+                                request_latency, sample_erasures)
+from repro.core.policy import (ALL_METHODS, TABLE_1, SplitMethod,
+                               suitability_table)

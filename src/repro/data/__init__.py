@@ -1,0 +1,2 @@
+from repro.data.pipeline import (DataConfig, MemmapDataset, make_stream,
+                                 write_corpus)

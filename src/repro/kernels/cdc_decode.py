@@ -1,0 +1,54 @@
+"""Pallas kernel for the r=1 recovery combine (paper Eq. 12).
+
+y_missing = parity - sum_{i valid} y_i, then scatter into the erased slot:
+  out[i] = valid[i] ? y[i] : (parity - sum_j valid[j]*y[j])
+This is the paper's "close-to-zero" recovery: one fused elementwise pass over
+the gathered shard outputs — no recompute, no weight reload. Memory-bound:
+reads (T+1) blocks, writes T. The general r>1 MDS decode solves a tiny system
+and stays in plain JAX (repro.core.coding/coded_layer); this kernel is the
+hot path that runs on EVERY request in coded serving.
+
+Layout: shard outputs stacked [T, rows, m_l]; tiles (rows, bn) with the full
+shard axis resident (T <= 64), validity mask as a [T] VMEM block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decode_kernel(valid_ref, y_ref, p_ref, o_ref):
+    # y_ref: [T, bm, bn]; p_ref: [1, bm, bn]; valid_ref: [T]
+    y = y_ref[...].astype(jnp.float32)
+    valid = valid_ref[...]
+    vmask = valid.astype(jnp.float32)[:, None, None]
+    zeroed = y * vmask                       # kill garbage in erased slots
+    total = jnp.sum(zeroed, axis=0)          # sum of the valid shards
+    missing = p_ref[0].astype(jnp.float32) - total  # Eq. 12
+    out = zeroed + (1.0 - vmask) * missing[None]
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def cdc_decode_pallas(y_shards: jax.Array, parity: jax.Array,
+                      valid: jax.Array, *, bm: int = 128, bn: int = 256,
+                      interpret: bool = False) -> jax.Array:
+    """Recover <=1 erased shard. y: [T, m, n], parity: [m, n], valid: [T]."""
+    t, m, n = y_shards.shape
+    bm, bn = min(bm, m), min(bn, n)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    return pl.pallas_call(
+        _decode_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((t,), lambda i, j: (0,)),
+            pl.BlockSpec((t, bm, bn), lambda i, j: (0, i, j)),
+            pl.BlockSpec((1, bm, bn), lambda i, j: (0, i, j)),
+        ],
+        out_specs=pl.BlockSpec((t, bm, bn), lambda i, j: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, m, n), y_shards.dtype),
+        interpret=interpret,
+    )(valid, y_shards, parity[None])

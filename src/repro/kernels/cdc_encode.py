@@ -1,0 +1,48 @@
+"""Pallas kernel for the OFFLINE parity-weight encode (paper Eq. 7/11).
+
+parity[j] = sum_i gen[j, i] * W_i over the T stacked weight shards — a
+tiny-contraction GEMM (T <= 64) over large [k, m_l] tiles. Memory-bound:
+reads T*k*m_l weights once, writes r*k*m_l parities. Tiled (bk x bn) over the
+weight plane with the full (small) shard axis resident per tile; generator
+coefficients ride along as a VMEM-resident [r, T] block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _encode_kernel(gen_ref, w_ref, o_ref):
+    # w_ref: [T, bk, bn]; gen_ref: [r, T]; o_ref: [r, bk, bn]
+    w = w_ref[...].astype(jnp.float32)
+    gen = gen_ref[...].astype(jnp.float32)
+    o_ref[...] = jax.lax.dot_general(
+        gen, w.reshape(w.shape[0], -1),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(o_ref.shape).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "bn", "interpret"))
+def cdc_encode_pallas(w_shards: jax.Array, gen: jax.Array, *, bk: int = 256,
+                      bn: int = 256, interpret: bool = False) -> jax.Array:
+    """[T, k, m_l] shards x [r, T] generator -> [r, k, m_l] parity weights."""
+    t, k, n = w_shards.shape
+    r, t2 = gen.shape
+    assert t == t2
+    bk, bn = min(bk, k), min(bn, n)
+    assert k % bk == 0 and n % bn == 0, (k, n, bk, bn)
+    return pl.pallas_call(
+        _encode_kernel,
+        grid=(k // bk, n // bn),
+        in_specs=[
+            pl.BlockSpec((r, t), lambda i, j: (0, 0)),
+            pl.BlockSpec((t, bk, bn), lambda i, j: (0, i, j)),
+        ],
+        out_specs=pl.BlockSpec((r, bk, bn), lambda i, j: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, k, n), w_shards.dtype),
+        interpret=interpret,
+    )(gen, w_shards)

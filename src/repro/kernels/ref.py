@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or x.dtype
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def cdc_encode_ref(w_shards: jax.Array, gen: jax.Array) -> jax.Array:
+    """[T, k, n] x [r, T] -> [r, k, n]."""
+    acc = jnp.tensordot(gen.astype(jnp.float32),
+                        w_shards.astype(jnp.float32), axes=[[1], [0]])
+    return acc.astype(w_shards.dtype)
+
+
+def cdc_decode_ref(y_shards: jax.Array, parity: jax.Array,
+                   valid: jax.Array) -> jax.Array:
+    """r=1 recovery, paper Eq. 12. y: [T, m, n], parity: [m, n], valid: [T]."""
+    vmask = valid.astype(jnp.float32)[:, None, None]
+    y = y_shards.astype(jnp.float32) * vmask
+    missing = parity.astype(jnp.float32) - y.sum(0)
+    out = y + (1.0 - vmask) * missing[None]
+    return out.astype(y_shards.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, gamma: jax.Array, eps: float = 1e-6
+                ) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * gamma.astype(jnp.float32)).astype(x.dtype)

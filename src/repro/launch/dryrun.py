@@ -1,0 +1,338 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: ``jax.jit(step).lower(**input_specs).compile()`` must succeed on
+the production meshes — (data=16, model=16) single-pod and
+(pod=2, data=16, model=16) multi-pod — for every assigned architecture and
+input shape. The compiled artifact also yields the roofline inputs
+(cost_analysis + HLO collective bytes) recorded in EXPERIMENTS.md.
+
+Resumable: results cache into a JSON file keyed by cell id; finished cells
+are skipped. Run single cells with --arch/--shape/--mesh for iteration.
+
+NOTE the XLA_FLAGS line above MUST stay the first statement — jax locks the
+device count at first init. Do not import jax (even transitively) above it.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import SHAPES, all_archs, get_arch, runnable  # noqa: E402
+from repro.dist.sharding import (batch_spec, param_specs,  # noqa: E402
+                                 state_specs)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import TPCtx, build  # noqa: E402
+from repro.optim import AdamWConfig, init_state  # noqa: E402
+from repro.roofline import roofline_report, roofline_terms  # noqa: E402
+from repro.roofline.hlo_cost import analyze_hlo  # noqa: E402
+from repro.train.train_step import TrainConfig, make_train_step  # noqa: E402
+
+DEFAULT_OUT = "/root/repo/results/dryrun.json"
+
+
+def count_params(params_shape, cfg) -> tuple[int, int]:
+    """Exact (active, total) parameter census from the init eval_shape.
+
+    Excludes parity leaves (redundant by construction) and the embedding
+    table (lookup is not matmul FLOPs); MoE active = total minus the
+    (1 - top_k/E) unrouted fraction of expert weights."""
+    from jax.tree_util import tree_flatten_with_path
+
+    def pname(path):
+        return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+
+    total = active = 0
+    e_pad = None
+    for path, leaf in tree_flatten_with_path(params_shape)[0]:
+        name = pname(path)
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        if name.endswith("cdc") or name.split("/")[-1] == "embed":
+            continue
+        total += n
+        if name.split("/")[-1] in ("we1", "we2", "we3"):
+            e_pad = leaf.shape[-3] if leaf.ndim == 3 else leaf.shape[1]
+            active += n * cfg.top_k / max(e_pad, 1)
+        else:
+            active += n
+    return int(active), int(total)
+
+
+def microbatches_for(cfg, shape, n_batch_devs: int = 16) -> int:
+    """Grad-accum splits keeping per-device microbatch activations bounded
+    (and the per-microbatch batch divisible by the batch-device count)."""
+    if shape.kind != "train":
+        return 1
+    if cfg.d_model >= 8192 or cfg.n_layers >= 90:
+        mb = 16
+    elif cfg.d_model >= 4096:
+        mb = 8
+    else:
+        mb = 4
+    if cfg.n_experts:
+        # §Perf H2b: each microbatch re-gathers the FSDP-sharded expert
+        # weights per layer (fwd + remat'd bwd); fewer, fatter microbatches
+        # trade activation memory for a ~mb-fold cut in gather wire bytes.
+        mb = min(mb, 4)
+    return min(mb, max(shape.global_batch // n_batch_devs, 1))
+
+
+def input_specs(model, shape, mesh):
+    """ShapeDtypeStruct stand-ins for the step inputs (no allocation)."""
+    if shape.kind == "train":
+        return model.input_spec(shape.global_batch, shape.seq_len)
+    if shape.kind == "prefill":
+        return model.input_spec(shape.global_batch, shape.seq_len)
+    # decode: one new token against a seq_len cache
+    return model.input_spec(shape.global_batch, 1)
+
+
+def _shardings(tree_specs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               coded: bool = False, code_r: int = 2,
+               verbose: bool = True) -> dict:
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    ok, why = runnable(cfg, shape)
+    if not ok:
+        return {"status": "skip", "why": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tp = mesh.shape["model"]
+    ctx = TPCtx(tp=tp, mode="coded" if coded else "plain", code_r=code_r,
+                mesh=mesh)
+    model = build(cfg, ctx)
+    dtype = jnp.bfloat16
+
+    t0 = time.time()
+    params_shape = jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0), dtype))
+    p_spec = param_specs(params_shape, mesh)
+    p_shard = _shardings(p_spec, mesh)
+    n_batch_devs = mesh.shape.get("pod", 1) * mesh.shape["data"]
+    gb = shape.global_batch
+    tok_spec = batch_spec(mesh) if gb % n_batch_devs == 0 else P()
+    tok_shard = NamedSharding(mesh, tok_spec)
+    in_sds = input_specs(model, shape, mesh)
+
+    # coded cells lower the RECOVERY math: the erasure mask is a runtime
+    # input (all-true in the fault-free steady state), so the parity GEMMs
+    # and the fused decode are part of the compiled step.
+    valid_sds = jax.ShapeDtypeStruct((tp,), jnp.bool_) if coded else None
+    valid_shard = NamedSharding(mesh, P()) if coded else None
+
+    if shape.kind == "train":
+        mb = microbatches_for(cfg, shape, n_batch_devs)
+        tstep = make_train_step(model, AdamWConfig(),
+                                TrainConfig(microbatches=mb, remat="full"))
+        opt_shape = jax.eval_shape(lambda p: init_state(p), params_shape)
+        o_spec = {"step": P(), "mu": p_spec, "nu": p_spec,
+                  "master": p_spec}
+        o_shard = _shardings(o_spec, mesh)
+        batch_sh = {"tokens": tok_shard}
+        if "frames" in in_sds:
+            batch_sh["frames"] = NamedSharding(mesh, batch_spec(mesh))
+        if coded:
+            fn = jax.jit(lambda p, o, b, v: tstep(p, o, b, v),
+                         in_shardings=(p_shard, o_shard, batch_sh,
+                                       valid_shard),
+                         out_shardings=(p_shard, o_shard, None),
+                         donate_argnums=(0, 1))
+            args = (params_shape, opt_shape, in_sds, valid_sds)
+        else:
+            fn = jax.jit(tstep,
+                         in_shardings=(p_shard, o_shard, batch_sh),
+                         out_shardings=(p_shard, o_shard, None),
+                         donate_argnums=(0, 1))
+            args = (params_shape, opt_shape, in_sds)
+    elif shape.kind == "prefill":
+        def prefill_step(params, batch, valid=None):
+            state = model.init_decode(params, batch, shape.global_batch,
+                                      shape.seq_len, dtype, valid=valid)
+            logits, state = model.decode(params, state, batch["tokens"],
+                                         valid, last_only=True)
+            return logits, state
+
+        state_shape = jax.eval_shape(
+            lambda p, b: model.init_decode(p, b, shape.global_batch,
+                                           shape.seq_len, dtype),
+            params_shape, in_sds)
+        s_shard = _shardings(state_specs(state_shape, mesh), mesh)
+        batch_sh = {"tokens": tok_shard}
+        if "frames" in in_sds:
+            batch_sh["frames"] = NamedSharding(mesh, batch_spec(mesh))
+        if coded:
+            fn = jax.jit(prefill_step,
+                         in_shardings=(p_shard, batch_sh, valid_shard),
+                         out_shardings=(None, s_shard))
+            args = (params_shape, in_sds, valid_sds)
+        else:
+            fn = jax.jit(prefill_step,
+                         in_shardings=(p_shard, batch_sh),
+                         out_shardings=(None, s_shard))
+            args = (params_shape, in_sds)
+    else:  # decode
+        # serving layout: weights replicated over `data` (fits comfortably:
+        # params/TP <= ~1 GB/chip bf16) => zero weight-gather traffic/step.
+        # MoE archs keep FSDP-sharded experts (replicating 100B+ of expert
+        # weights per data shard would blow HBM; see EXPERIMENTS.md).
+        if not cfg.n_experts:
+            p_spec = param_specs(params_shape, mesh, fsdp=None)
+            p_shard = _shardings(p_spec, mesh)
+        state_shape = jax.eval_shape(
+            lambda p, b: model.init_decode(p, b, shape.global_batch,
+                                           shape.seq_len, dtype),
+            params_shape,
+            model.input_spec(shape.global_batch, shape.seq_len))
+        s_spec = state_specs(state_shape, mesh)
+        s_shard = _shardings(s_spec, mesh)
+
+        def serve_step(params, state, tokens, valid=None):
+            return model.decode(params, state, tokens, valid)
+
+        if coded:
+            fn = jax.jit(serve_step,
+                         in_shardings=(p_shard, s_shard, tok_shard,
+                                       valid_shard),
+                         out_shardings=(None, s_shard),
+                         donate_argnums=(1,))
+            args = (params_shape, state_shape, in_sds["tokens"], valid_sds)
+        else:
+            fn = jax.jit(serve_step,
+                         in_shardings=(p_shard, s_shard, tok_shard),
+                         out_shardings=(None, s_shard),
+                         donate_argnums=(1,))
+            args = (params_shape, state_shape, in_sds["tokens"])
+
+    lowered = fn.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    xla_cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # trip-count-weighted analysis (XLA's cost_analysis counts loop bodies
+    # once; see roofline/hlo_cost.py)
+    wcost = analyze_hlo(hlo)
+    coll = {"total": wcost["wire_bytes"], "counts":
+            wcost["collective_counts"], **wcost["wire_by_kind"]}
+
+    # roofline
+    terms = roofline_terms({"flops": wcost["flops"],
+                            "bytes accessed": wcost["bytes"]}, coll)
+    chips = 512 if multi_pod else 256
+    n_active, n_total = count_params(params_shape, cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6 * n_active * tokens / chips
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2 * n_active * tokens / chips
+    else:
+        tokens = shape.global_batch  # one token per sequence
+        model_flops = 2 * n_active * tokens / chips
+    report = roofline_report(terms, model_flops)
+
+    mem_fields = {}
+    for f in ("temp_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        mem_fields[f] = getattr(mem, f, None)
+
+    rec = {
+        "status": "ok",
+        "arch": arch, "shape": shape_name,
+        "mesh": "pod2x16x16" if multi_pod else "16x16",
+        "coded": coded,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem_fields,
+        "cost": {"flops": wcost["flops"], "bytes": wcost["bytes"],
+                 "xla_flops_unweighted":
+                     xla_cost.get("flops") if xla_cost else None},
+        "params": {"total": n_total, "active": n_active},
+        "collectives": {k: v for k, v in coll.items() if k != "counts"},
+        "collective_counts": coll["counts"],
+        "roofline": {k: report[k] for k in
+                     ("compute_s", "memory_s", "collective_s", "dominant",
+                      "useful_ratio", "roofline_fraction", "model_flops")},
+    }
+    if verbose:
+        print(json.dumps(rec, indent=1, default=str))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--coded", action="store_true")
+    ap.add_argument("--code-r", type=int, default=2)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else sorted(all_archs())
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                key = f"{arch}|{shape}|{'multi' if mp else 'single'}" + \
+                    ("|coded" if args.coded else "")
+                if key in results and results[key].get("status") in \
+                        ("ok", "skip"):
+                    print(f"[cached] {key}")
+                    continue
+                print(f"[lower+compile] {key}", flush=True)
+                try:
+                    rec = lower_cell(arch, shape, multi_pod=mp,
+                                     coded=args.coded, code_r=args.code_r,
+                                     verbose=False)
+                except Exception as e:  # record the failure, keep going
+                    rec = {"status": "error", "error": repr(e),
+                           "trace": traceback.format_exc()[-2000:]}
+                    print(rec["trace"])
+                results[key] = rec
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1, default=str)
+                print(f"  -> {rec['status']} "
+                      f"(compile {rec.get('compile_s', '-')}s, "
+                      f"dominant {rec.get('roofline', {}).get('dominant')})",
+                      flush=True)
+
+    n_ok = sum(1 for r in results.values() if r["status"] == "ok")
+    n_skip = sum(1 for r in results.values() if r["status"] == "skip")
+    n_err = sum(1 for r in results.values() if r["status"] == "error")
+    print(f"done: {n_ok} ok, {n_skip} structured skips, {n_err} errors")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.models.common import TPCtx
+from repro.models.zoo import Model, build

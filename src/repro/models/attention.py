@@ -1,0 +1,331 @@
+"""Attention: MHA/GQA, RoPE, full/sliding-window masks, KV cache, flash-style
+chunking.
+
+The QKV projections are column-parallel => CODED in coded mode (paper Table 1
+"output splitting: Yes"); Wo is row-parallel => never coded ("input
+splitting: No").
+
+TP layout: scores/AV shard over QUERY heads (`model` axis). GQA KV heads are
+stored at their logical count (cache savings preserved) and broadcast to the
+query-head count right before the einsum — a local slice-of-replicated op,
+no comm. Head counts that don't divide the TP degree (hymba's 25, xlstm's 4)
+are padded with zero-weight heads at init (wo's rows for padded heads are
+zero, so they contribute nothing); padding is a run-layout detail, the
+logical config is untouched.
+
+Memory: scores for a 32k prefill would be O(S^2); we stream KV chunks with
+an online softmax (flash-style) under lax.scan and map over Q chunks.
+Decode against a long cache uses a single KV chunk so the cache can stay
+sequence-sharded over `model` (flash-decoding style) with GSPMD reducing the
+softmax across shards.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (Params, TPCtx, col_dense, linear_init, rope,
+                                 row_dense)
+
+NEG_INF = -1e30
+
+
+def attn_dims(cfg, tp: int) -> tuple[int, int, int]:
+    """(hq_run, hkv_run, group): head counts padded for the TP degree."""
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    hq_run = -(-hq // tp) * tp if tp > 1 else hq
+    hkv_run = hkv
+    while hq_run % hkv_run:
+        hkv_run += 1
+    return hq_run, hkv_run, hq_run // hkv_run
+
+
+def attn_init(key, cfg, ctx: TPCtx, dtype) -> Params:
+    d, hd = cfg.d_model, cfg.hd
+    hq_run, hkv_run, _ = attn_dims(cfg, ctx.tp)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": linear_init(ks[0], d, hq_run * hd, ctx, dtype),
+        "wk": linear_init(ks[1], d, hkv_run * hd, ctx, dtype),
+        "wv": linear_init(ks[2], d, hkv_run * hd, ctx, dtype),
+        "wo": linear_init(ks[3], hq_run * hd, d, ctx, dtype,
+                          scale=1.0 / (hq_run * hd) ** 0.5, coded=False),
+    }
+    # zero the padded query/kv heads so they are semantically absent
+    if hq_run != cfg.n_heads:
+        wq = p["wq"]["w"].reshape(d, -1)
+        p["wq"]["w"] = wq.at[:, cfg.n_heads * hd:hq_run * hd].set(0.0)
+        wo = p["wo"]["w"]
+        p["wo"]["w"] = wo.at[cfg.n_heads * hd:hq_run * hd, :].set(0.0)
+    if hkv_run != cfg.n_kv_heads:
+        for nm in ("wk", "wv"):
+            w = p[nm]["w"]
+            p[nm]["w"] = w.at[:, cfg.n_kv_heads * hd:hkv_run * hd].set(0.0)
+    return p
+
+
+def _mask(q_pos, k_pos, kind: str, window: int):
+    """q_pos: [Sq], k_pos: [Sk] -> bool [Sq, Sk] (True = attend).
+
+    kinds: bidir (encoder/cross), causal, swa. Negative k_pos marks an empty
+    cache slot and is never attended."""
+    dq, dk = q_pos[:, None], k_pos[None, :]
+    valid_slot = dk >= 0
+    if kind == "bidir":
+        return valid_slot
+    m = (dk <= dq) & valid_slot
+    if kind == "swa":
+        m &= dk > dq - window
+    return m
+
+
+def _sdpa_chunked(q, k, v, q_pos, k_pos, *, kind: str, window: int,
+                  kv_chunk: int, q_chunk: int, group: int) -> jax.Array:
+    """Online-softmax attention over expanded heads.
+
+    q: [B, Sq, H, hd]; k/v: [B, Sk, Hkv, hd] with H = group * Hkv.
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    scale = hd ** -0.5
+    kv_chunk = min(kv_chunk, sk)
+    single_chunk = kv_chunk >= sk
+    if group > 1 and not single_chunk:
+        # GQA: broadcast KV to query heads (local slice of replicated)
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+    q_chunk = min(q_chunk, sq)
+    n_kv = -(-sk // kv_chunk)
+    pad_k = n_kv * kv_chunk - sk
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad_k), constant_values=-(10 ** 9))
+    hk = k.shape[2]
+    kc = k.reshape(b, n_kv, kv_chunk, hk, hd)
+    vc = v.reshape(b, n_kv, kv_chunk, hk, hd)
+    kpc = k_pos.reshape(n_kv, kv_chunk)
+
+    def one_q_chunk(args):
+        qi, qpi = args  # [B, qc, H, hd], [qc]
+
+        def kv_attend(ki, vi, kpi, carry=None):
+            # keep K/V in their storage dtype (bf16 cache must NOT be
+            # upcast: an f32 copy of a sequence-sharded cache doubles the
+            # gather bytes GSPMD moves); accumulate in f32 via
+            # preferred_element_type.
+            if carry is None and group > 1:
+                # decode fast path, GQA GROUPED: never materialize the
+                # expanded [B, C, Hq, hd] KV (8x the cache for deepseek)
+                qg = qi.reshape(qi.shape[0], qi.shape[1], -1, group, hd)
+                s = jnp.einsum("bqkgd,bckd->bkgqc", qg, ki,
+                               preferred_element_type=jnp.float32) * scale
+                msk = _mask(qpi, kpi, kind, window)
+                s = jnp.where(msk[None, None, None], s, NEG_INF)
+                pr = jax.nn.softmax(s, axis=-1)
+                o = jnp.einsum("bkgqc,bckd->bqkgd", pr.astype(vi.dtype),
+                               vi, preferred_element_type=jnp.float32)
+                return o.reshape(qi.shape)
+            s = jnp.einsum("bqhd,bchd->bhqc", qi, ki,
+                           preferred_element_type=jnp.float32) * scale
+            msk = _mask(qpi, kpi, kind, window)  # [qc, kc]
+            s = jnp.where(msk[None, None], s, NEG_INF)
+            if carry is None:  # single-chunk fast path (decode)
+                p = jax.nn.softmax(s, axis=-1)
+                return jnp.einsum("bhqc,bchd->bqhd", p.astype(vi.dtype),
+                                  vi, preferred_element_type=jnp.float32)
+            acc, m_run, l_run = carry
+            m_new = jnp.maximum(m_run, s.max(-1))  # [B, H, qc]
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + p.sum(-1)
+            pv = jnp.einsum("bhqc,bchd->bhqd", p.astype(vi.dtype), vi,
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return acc, m_new, l_new
+
+        if n_kv == 1:
+            return kv_attend(kc[:, 0], vc[:, 0], kpc[0])
+
+        qc = qi.shape[1]
+        acc0 = jnp.zeros((b, h, qc, hd), jnp.float32)
+        m0 = jnp.full((b, h, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, qc), jnp.float32)
+
+        def step(carry, inp):
+            ki, vi, kpi = inp
+            return kv_attend(ki, vi, kpi, carry), None
+
+        (acc, m_run, l_run), _ = jax.lax.scan(
+            step, (acc0, m0, l0),
+            (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), kpc))
+        out = acc / jnp.maximum(l_run[..., None], 1e-30)
+        return jnp.moveaxis(out, 2, 1)  # [B, qc, H, hd]
+
+    n_q = -(-sq // q_chunk)
+    pad_q = n_q * q_chunk - sq
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pad_q))
+    if n_q == 1:
+        out = one_q_chunk((q, q_pos))
+    else:
+        qs = jnp.moveaxis(q.reshape(b, n_q, q_chunk, h, hd), 1, 0)
+        qps = q_pos.reshape(n_q, q_chunk)
+        outs = jax.lax.map(one_q_chunk, (qs, qps))  # [n_q, B, qc, H, hd]
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, n_q * q_chunk, h, hd)
+    return out[:, :sq]
+
+
+def _cache_update(cache, k, v, positions, s: int, C: int):
+    """Write new KV into the (possibly sequence-sharded) ring cache.
+
+    Scatter with traced indices would make GSPMD all-gather the WHOLE cache
+    per step (measured: 82 GB/step on granite decode_32k). Instead:
+      s == 1 : dynamic-update-slice at a scalar slot — each shard resolves
+               locally whether the write lands in its range; zero gathers.
+      s >= C : the new tokens overwrite the entire ring (SWA prefill):
+               jnp.roll of the last C entries, no scatter.
+      else   : general scatter (host-side engine path; never lowered in the
+               production decode cells).
+    """
+    kd, vd = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
+    if s == 1:
+        slot = cache["len"] % C
+        k_cached = jax.lax.dynamic_update_slice_in_dim(cache["k"], kd,
+                                                       slot, 1)
+        v_cached = jax.lax.dynamic_update_slice_in_dim(cache["v"], vd,
+                                                       slot, 1)
+        cpos = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], positions.astype(cache["pos"].dtype), slot, 0)
+    elif s >= C:
+        # ring holds exactly the last C tokens; slot of the oldest kept
+        # token is (len + s - C) % C => roll into place
+        shift = (cache["len"] + s) % C
+        k_cached = jnp.roll(kd[:, -C:], shift, axis=1)
+        v_cached = jnp.roll(vd[:, -C:], shift, axis=1)
+        cpos = jnp.roll(positions[-C:].astype(cache["pos"].dtype), shift)
+    else:
+        slot = (cache["len"] + jnp.arange(s)) % C
+        k_cached = cache["k"].at[:, slot].set(kd)
+        v_cached = cache["v"].at[:, slot].set(vd)
+        cpos = cache["pos"].at[slot].set(positions)
+    return k_cached, v_cached, cpos
+
+
+def attention(ctx: TPCtx, p: Params, cfg, x: jax.Array, *,
+              valid=None, cache: Params | None = None,
+              pos_offset=0, q_chunk: int = 512, kv_chunk: int = 1024,
+              kind: str | None = None, kv_override=None):
+    """x: [B, S, D] -> ([B, S, D], new_cache).
+
+    kind: mask override ("bidir" for encoder/cross); default maps
+      cfg.attn_kind: full->causal, swa->swa.
+    kv_override: (k, v, k_pos) — cross-attention with external KV.
+    cache (decode): {"k": [B, C, Hkv, hd], "v": ..., "pos": [C] (neg =
+      empty), "len": scalar}. C = window for SWA (ring buffer).
+    """
+    b, s, d = x.shape
+    hd = cfg.hd
+    hq_run, hkv_run, group = attn_dims(cfg, ctx.tp)
+    if kind is None:
+        kind = "swa" if cfg.attn_kind == "swa" else "causal"
+    q = col_dense(ctx, p["wq"], x, hq_run * hd, valid) \
+        .reshape(b, s, hq_run, hd)
+    positions = pos_offset + jnp.arange(s)
+    new_cache = cache
+
+    if kv_override is not None:
+        k, v, k_pos = kv_override
+        if kind != "bidir":
+            q = rope(q, positions, cfg.rope_theta)
+    else:
+        k = col_dense(ctx, p["wk"], x, hkv_run * hd, valid) \
+            .reshape(b, s, hkv_run, hd)
+        v = col_dense(ctx, p["wv"], x, hkv_run * hd, valid) \
+            .reshape(b, s, hkv_run, hd)
+        if kind != "bidir":
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+        if cache is None:
+            k_pos = positions
+            # shard attention compute over query heads (TP): expand KV to
+            # query heads HERE and pin both to the head layout, so GSPMD
+            # never reshards mid-attention.
+            if ctx.mesh is not None and hq_run % max(ctx.tp, 1) == 0:
+                batch = tuple(a for a in ("pod", ctx.fsdp)
+                              if a and a in ctx.mesh.axis_names) or None
+                q = ctx.shard(q, batch, None, ctx.axis, None)
+                if group > 1:
+                    k = jnp.repeat(k, group, axis=2)
+                    v = jnp.repeat(v, group, axis=2)
+                    group = 1
+                k = ctx.shard(k, batch, None, ctx.axis, None)
+                v = ctx.shard(v, batch, None, ctx.axis, None)
+        else:
+            C = cache["k"].shape[1]
+            k_cached, v_cached, cpos = _cache_update(
+                cache, k, v, positions, s, C)
+            new_cache = {"k": k_cached, "v": v_cached, "pos": cpos,
+                         "len": cache["len"] + s}
+            if s == 1:
+                # decode: single C-sharded chunk; the grouped fast path in
+                # _sdpa avoids materializing the expanded KV. PIN the
+                # sequence sharding: without the constraint GSPMD reshards
+                # the cache onto heads — a full f32 all-gather per layer
+                # (measured 82 GB per decoded token on granite; §Perf H3).
+                k, v, k_pos = k_cached, v_cached, cpos
+                kv_chunk = max(kv_chunk, C)
+                if ctx.mesh is not None:
+                    batch = tuple(a for a in ("pod", ctx.fsdp)
+                                  if a and a in ctx.mesh.axis_names) or None
+                    k = ctx.shard(k, batch, ctx.axis, None, None)
+                    v = ctx.shard(v, batch, ctx.axis, None, None)
+            else:
+                # prefill: the fresh K/V contain every cached token (the
+                # cache starts empty), so attend over them with the
+                # STREAMING path (O(S*chunk) tiles, head-sharded) instead
+                # of materializing [S, C] scores against the cache.
+                k_pos = positions
+                if ctx.mesh is not None and hq_run % max(ctx.tp, 1) == 0:
+                    batch = tuple(a for a in ("pod", ctx.fsdp)
+                                  if a and a in ctx.mesh.axis_names) or None
+                    q = ctx.shard(q, batch, None, ctx.axis, None)
+                    if group > 1:
+                        k = jnp.repeat(k, group, axis=2)
+                        v = jnp.repeat(v, group, axis=2)
+                        group = 1
+                    k = ctx.shard(k, batch, None, ctx.axis, None)
+                    v = ctx.shard(v, batch, None, ctx.axis, None)
+
+    out = _sdpa_chunked(q, k, v, positions, k_pos, kind=kind,
+                        window=cfg.window, kv_chunk=kv_chunk,
+                        q_chunk=q_chunk, group=group)
+    out = out.reshape(b, s, hq_run * hd).astype(x.dtype)
+    y = row_dense(ctx, p["wo"], out)
+    return y, new_cache
+
+
+def cross_kv(ctx: TPCtx, p: Params, cfg, enc_out: jax.Array, valid=None):
+    """Precompute cross-attention KV from encoder output (cached once)."""
+    b, se, _ = enc_out.shape
+    hd = cfg.hd
+    _, hkv_run, _ = attn_dims(cfg, ctx.tp)
+    k = col_dense(ctx, p["wk"], enc_out, hkv_run * hd, valid) \
+        .reshape(b, se, hkv_run, hd)
+    v = col_dense(ctx, p["wv"], enc_out, hkv_run * hd, valid) \
+        .reshape(b, se, hkv_run, hd)
+    return k, v, jnp.arange(se)
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
+               tp: int = 1) -> Params:
+    C = min(max_len, cfg.window) if cfg.attn_kind == "swa" else max_len
+    _, hkv_run, _ = attn_dims(cfg, tp)
+    hd = cfg.hd
+    return {
+        "k": jnp.zeros((batch, C, hkv_run, hd), dtype),
+        "v": jnp.zeros((batch, C, hkv_run, hd), dtype),
+        "pos": jnp.full((C,), -(10 ** 9), jnp.int32),
+        "len": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,230 @@
+"""Shared model machinery: TP context, coded/plain dense, norms, RoPE, init.
+
+Models are pure functions over param pytrees (no flax). Tensor-parallel and
+CDC behaviour is threaded through ``TPCtx``:
+
+  mode="plain":  column-parallel GEMMs are ordinary matmuls; GSPMD shards
+                 them via the constraints in dist.sharding (megatron-style,
+                 uncoded baseline).
+  mode="coded":  column-parallel GEMMs run through core.coded_matmul — the
+                 paper's output-splitting with parity shards and fused
+                 recovery; the merge (gather) happens at every coded GEMM
+                 boundary exactly as the paper's distribution does.
+
+Row-parallel GEMMs (attention Wo, FFN W2) are never coded (paper Table 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.coded_layer import (CodedDenseSpec, coded_matmul,
+                                    make_parity_weights)
+from repro.core.coding import CodeSpec
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class TPCtx:
+    """Static tensor-parallel + CDC context for a model invocation."""
+
+    tp: int = 1                    # T: logical shards of every coded GEMM
+    mode: str = "plain"            # plain | coded
+    code_r: int = 2
+    code_layout: str = "folded"
+    mesh: Any = None               # jax Mesh for sharding constraints (opt.)
+    axis: str = "model"            # TP axis name
+    fsdp: str | None = "data"      # FSDP axis name (weights)
+    seq_axis: str | None = None    # SP: shard sequence dim of activations
+    moe_capacity: float = 1.25     # MoE capacity factor (<= 0: no dropping)
+
+    @property
+    def coded(self) -> bool:
+        return self.mode == "coded" and self.tp > 1
+
+    @property
+    def spec(self) -> CodedDenseSpec | None:
+        if not self.coded:
+            return None
+        return CodedDenseSpec(CodeSpec(self.tp, self.code_r),
+                              layout=self.code_layout)
+
+    def pad_dim(self, m: int) -> int:
+        """Column dims of coded GEMMs must split into T x T slices. The same
+        padding is applied in plain mode so param shapes (and checkpoints)
+        are identical across modes."""
+        q = self.tp * self.tp
+        return ((m + q - 1) // q) * q
+
+    def shard(self, x: jax.Array, *spec) -> jax.Array:
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    def shard_act(self, x: jax.Array, col: bool = False) -> jax.Array:
+        """[B, S, D]-style activation constraint: batch over fsdp(+pod),
+        optionally last dim over the TP axis."""
+        if self.mesh is None:
+            return x
+        batch_axes = tuple(a for a in ("pod", self.fsdp)
+                           if a and a in self.mesh.axis_names)
+        batch = batch_axes if batch_axes else None
+        spec = [batch] + [None] * (x.ndim - 1)
+        if col:
+            spec[-1] = self.axis
+        return self.shard(x, *spec)
+
+
+# ---------------------------------------------------------------- dense ----
+
+def linear_init(key, k: int, m: int, ctx: TPCtx, dtype,
+                scale: float | None = None, coded: bool = True) -> Params:
+    """A (possibly coded) linear layer's params. Stores the padded weight;
+    callers slice outputs back to the logical dim."""
+    m_pad = ctx.pad_dim(m) if coded else m
+    scale = scale if scale is not None else 1.0 / math.sqrt(k)
+    w = (jax.random.normal(key, (k, m_pad), jnp.float32) * scale)
+    w = w.at[:, m:].set(0.0) if m_pad != m else w
+    p: Params = {"w": w.astype(dtype)}
+    if coded and ctx.coded:
+        p["cdc"] = make_parity_weights(p["w"], ctx.spec)
+    return p
+
+
+def col_dense(ctx: TPCtx, p: Params, x: jax.Array, out_dim: int,
+              valid: jax.Array | None = None) -> jax.Array:
+    """Column-parallel (output-split) GEMM — CODEABLE (paper Table 1)."""
+    w = p["w"]
+    if ctx.coded and "cdc" in p:
+        y = coded_matmul(x, w, p["cdc"], ctx.spec, valid)
+        y = ctx.shard_act(y)          # merged output, replicated over TP
+    else:
+        y = x @ w
+        y = ctx.shard_act(y, col=True)
+    return y[..., :out_dim] if y.shape[-1] != out_dim else y
+
+
+def row_dense(ctx: TPCtx, p: Params, x: jax.Array) -> jax.Array:
+    """Row-parallel (input-split) GEMM — NOT codeable (paper Eq. 13-14);
+    GSPMD reduces the partial sums with a psum/reduce-scatter."""
+    y = x @ p["w"]
+    return ctx.shard_act(y)
+
+
+def encode_tree(params: Params, ctx: TPCtx) -> Params:
+    """(Re)compute every parity leaf from its base weight — the paper's
+    OFFLINE encode pass ('CDC weights are created offline and loaded to the
+    storage', §6). Run after init, load, or any weight update."""
+    if not ctx.coded:
+        return params
+
+    def walk(node):
+        if isinstance(node, dict):
+            if "w" in node and "cdc" in node:
+                node = dict(node)
+                node["cdc"] = make_parity_weights(node["w"], ctx.spec)
+                return node
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    return walk(params)
+
+
+# ---------------------------------------------------------------- norms ----
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * p["g"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["g"].astype(jnp.float32)
+            + p["b"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- rope ----
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, hd]; positions: [..., S] (broadcastable)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:2 * half]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos,
+                           x[..., 2 * half:]], axis=-1)
+    return rot.astype(x.dtype)
+
+
+def sinusoidal_pos(seq: int, d: int, dtype=jnp.float32) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32)
+                  * (-math.log(10000.0) / d))
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div[: (d + 1) // 2]))
+    return pe.astype(dtype)
+
+
+def chunked_time_scan(step, init, xs, chunk: int = 64):
+    """lax.scan over time with chunk-level activation checkpointing.
+
+    A plain scan over S=4096 steps makes the backward pass save every
+    per-step carry (O(S * state) — 80+ GB for mLSTM matrix memory). Scanning
+    over S/chunk rematerialized chunks keeps only chunk-boundary carries:
+    peak O((S/chunk + chunk) * state).
+
+    xs: pytree with leading time dim S; returns (carry, ys) like lax.scan.
+    """
+    leaves = jax.tree.leaves(xs)
+    S = leaves[0].shape[0]
+    if S <= chunk or S % chunk:
+        return jax.lax.scan(step, init, xs)
+    n = S // chunk
+
+    def inner(carry, xc):
+        return jax.lax.scan(step, carry, xc)
+
+    inner = jax.checkpoint(inner)
+
+    def outer(carry, xc):
+        return inner(carry, xc)
+
+    xs_c = jax.tree.map(
+        lambda a: a.reshape((n, chunk) + a.shape[1:]), xs)
+    carry, ys_c = jax.lax.scan(outer, init, xs_c)
+    ys = jax.tree.map(
+        lambda a: a.reshape((a.shape[0] * a.shape[1],) + a.shape[2:]), ys_c)
+    return carry, ys
+
+
+def activation(name: str, x: jax.Array) -> jax.Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(name)

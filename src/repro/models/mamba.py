@@ -1,0 +1,106 @@
+"""Selective-SSM (Mamba) branch — used by hymba's parallel attn+mamba blocks.
+
+TPU adaptation: the recurrence is a per-channel linear scan (VPU work, not
+MXU); the heavy GEMMs (in/out projections) are ordinary column/row-parallel
+layers, so CDC coding applies to in_proj exactly like any output-split GEMM
+(DESIGN.md §3) and the nonlinear recurrence stays shard-local between coded
+boundaries. State is O(1) in sequence length => the long_500k decode cell is
+runnable for SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (Params, TPCtx, chunked_time_scan,
+                                 col_dense, linear_init, row_dense)
+
+CONV_K = 4
+
+
+def mamba_init(key, cfg, ctx: TPCtx, dtype) -> Params:
+    d = cfg.d_model
+    di = d  # branch width (parallel to attention in hymba)
+    n = cfg.ssm_state
+    dt_rank = max(d // 16, 1)
+    ks = jax.random.split(key, 8)
+    return {
+        "in_proj": linear_init(ks[0], d, 2 * di, ctx, dtype),   # x and gate z
+        "conv_w": (jax.random.normal(ks[1], (CONV_K, di), jnp.float32)
+                   * 0.5).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wbc": linear_init(ks[2], di, 2 * n, ctx, dtype, coded=False),
+        "wdt1": (jax.random.normal(ks[3], (di, dt_rank), jnp.float32)
+                 / d ** 0.5).astype(dtype),
+        "wdt2": (jax.random.normal(ks[4], (dt_rank, di), jnp.float32)
+                 / dt_rank ** 0.5).astype(dtype),
+        "dt_bias": jnp.zeros((di,), dtype),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                  (di, 1))),             # [di, n]
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": linear_init(ks[5], di, d, ctx, dtype,
+                                scale=1.0 / di ** 0.5, coded=False),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: [B, S, di]; w: [K, di]; state: [B, K-1, di].
+
+    Returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # [B, S+K-1, di]
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(k))
+    new_state = xp[:, -(k - 1):]
+    return y + b[None, None], new_state
+
+
+def mamba(ctx: TPCtx, p: Params, cfg, x: jax.Array, valid=None,
+          state: Params | None = None):
+    """x: [B, S, D] -> ([B, S, D], new_state)."""
+    b, s, d = x.shape
+    di = d
+    n = cfg.ssm_state
+    xz = col_dense(ctx, p["in_proj"], x, 2 * di, valid)
+    xm, z = xz[..., :di], xz[..., di:]
+
+    conv_state = state["conv"] if state is not None else None
+    xm, new_conv = _causal_conv(xm, p["conv_w"], p["conv_b"], conv_state)
+    xm = jax.nn.silu(xm)
+
+    bc = xm @ p["wbc"]["w"][:, :2 * n]
+    bmat, cmat = bc[..., :n], bc[..., n:]  # [B, S, n]
+    dt = jax.nn.softplus(
+        (xm @ p["wdt1"]) @ p["wdt2"] + p["dt_bias"][None, None])  # [B, S, di]
+    a = -jnp.exp(p["a_log"])  # [di, n]
+
+    decay = jnp.exp(dt.astype(jnp.float32)[..., None] * a[None, None])
+    drive = (dt * xm).astype(jnp.float32)[..., None] \
+        * bmat.astype(jnp.float32)[..., None, :]  # [B, S, di, n]
+
+    h0 = state["ssm"] if state is not None else jnp.zeros((b, di, n),
+                                                          jnp.float32)
+
+    def step(h, inp):
+        dec, drv, c = inp  # [B, di, n], [B, di, n], [B, n]
+        h = dec * h + drv
+        y = jnp.einsum("bdn,bn->bd", h, c)
+        return h, y
+
+    hT, ys = chunked_time_scan(
+        step, h0,
+        (jnp.moveaxis(decay, 1, 0), jnp.moveaxis(drive, 1, 0),
+         jnp.moveaxis(cmat.astype(jnp.float32), 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1)  # [B, S, di]
+    y = (y + xm.astype(jnp.float32) * p["d_skip"][None, None]).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = row_dense(ctx, p["out_proj"], y)
+    new_state = {"conv": new_conv, "ssm": hT}
+    return out, new_state
+
+
+def init_mamba_state(cfg, batch: int, dtype=jnp.bfloat16) -> Params:
+    di, n = cfg.d_model, cfg.ssm_state
+    return {"conv": jnp.zeros((batch, CONV_K - 1, di), dtype),
+            "ssm": jnp.zeros((batch, di, n), jnp.float32)}

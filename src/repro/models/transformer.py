@@ -1,0 +1,215 @@
+"""Decoder-only LM assembly: dense / MoE / hybrid(attn+mamba) / xLSTM.
+
+Layers are stacked on a leading [L, ...] axis and driven by jax.lax.scan
+(one layer traced once => small HLO, fast multi-hundred-layer compiles, and
+the natural structure for FSDP gather-per-layer and pipeline stages).
+xLSTM is heterogeneous (mLSTM/sLSTM mix) and unrolls instead.
+
+Every model function takes the TPCtx (TP size / coded mode / mesh) and an
+optional ``valid`` erasure mask — the CDC failure channel threads through the
+whole forward pass to every coded GEMM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import ffn as ffn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.common import (Params, TPCtx, col_dense, linear_init,
+                                 rmsnorm, rmsnorm_init)
+
+
+def _remat(f, policy: str = "full"):
+    if policy == "none":
+        return f
+    if policy == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots
+        return jax.checkpoint(f, policy=pol)
+    return jax.checkpoint(f)
+
+
+# --------------------------------------------------------------- layers ----
+
+def xlstm_block_kinds(cfg) -> list[str]:
+    """Static mLSTM/sLSTM schedule (every ``slstm_every``-th block is sLSTM;
+    xLSTM[7:1] for the 125m config). Derived from cfg, never stored in the
+    param pytree."""
+    kinds = []
+    for i in range(cfg.n_layers):
+        if cfg.slstm_every and (i + 1) % cfg.slstm_every == 0:
+            kinds.append("slstm")
+        else:
+            kinds.append("mlstm")
+    return kinds
+
+
+def _layer_init(key, cfg, ctx: TPCtx, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"ln1": rmsnorm_init(cfg.d_model),
+                 "attn": attn_mod.attn_init(ks[0], cfg, ctx, dtype)}
+    if cfg.family == "hybrid":
+        p["mamba"] = mamba_mod.mamba_init(ks[1], cfg, ctx, dtype)
+    if cfg.n_experts:
+        p["ln2"] = rmsnorm_init(cfg.d_model)
+        p["moe"] = ffn_mod.moe_init(ks[2], cfg, ctx, dtype)
+    elif cfg.d_ff:
+        p["ln2"] = rmsnorm_init(cfg.d_model)
+        p["ffn"] = ffn_mod.ffn_init(ks[3], cfg, ctx, dtype)
+    return p
+
+
+def _layer_fwd(cfg, ctx: TPCtx, p: Params, x, valid, cache, mamba_state,
+               pos_offset, q_chunk, kv_chunk):
+    """One transformer block. Returns (x, new_cache, new_mamba_state)."""
+    xn = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    a, new_cache = attn_mod.attention(
+        ctx, p["attn"], cfg, xn, valid=valid, cache=cache,
+        pos_offset=pos_offset, q_chunk=q_chunk, kv_chunk=kv_chunk)
+    new_ms = mamba_state
+    if cfg.family == "hybrid":
+        m, new_ms = mamba_mod.mamba(ctx, p["mamba"], cfg, xn, valid,
+                                    mamba_state)
+        a = (a + m) * 0.5
+    x = x + a
+    if cfg.n_experts:
+        x = x + ffn_mod.moe(ctx, p["moe"],
+                            cfg, rmsnorm(p["ln2"], x, cfg.norm_eps), valid)
+    elif cfg.d_ff:
+        x = x + ffn_mod.ffn(ctx, p["ffn"],
+                            cfg, rmsnorm(p["ln2"], x, cfg.norm_eps), valid)
+    return x, new_cache, new_ms
+
+
+# ---------------------------------------------------------------- model ----
+
+def init_params(cfg, key, ctx: TPCtx, dtype=jnp.float32) -> Params:
+    k_emb, k_head, k_layers = jax.random.split(key, 3)
+    d = cfg.d_model
+    vocab_pad = ctx.pad_dim(cfg.vocab)
+    params: Params = {
+        "embed": (jax.random.normal(k_emb, (vocab_pad, d), jnp.float32)
+                  * 0.02).astype(dtype),
+        "ln_f": rmsnorm_init(d),
+        "lm_head": linear_init(k_head, d, cfg.vocab, ctx, dtype,
+                               scale=1.0 / d ** 0.5),
+    }
+    if cfg.ssm_kind == "xlstm":
+        blocks = []
+        for i, kind in enumerate(xlstm_block_kinds(cfg)):
+            kb = jax.random.fold_in(k_layers, i)
+            init = xlstm_mod.slstm_init if kind == "slstm" \
+                else xlstm_mod.mlstm_init
+            blocks.append(init(kb, cfg, ctx, dtype))
+        params["blocks"] = blocks
+    else:
+        keys = jax.random.split(k_layers, cfg.n_layers)
+        params["layers"] = jax.vmap(
+            lambda k: _layer_init(k, cfg, ctx, dtype))(keys)
+    return params
+
+
+def forward(cfg, params: Params, ctx: TPCtx, tokens: jax.Array,
+            valid: jax.Array | None = None, *, remat: str = "full",
+            q_chunk: int = 512, kv_chunk: int = 1024) -> jax.Array:
+    """tokens: [B, S] int32 -> logits [B, S, vocab] (fp32)."""
+    x = params["embed"][tokens].astype(params["embed"].dtype)
+    x = ctx.shard_act(x)
+
+    if cfg.ssm_kind == "xlstm":
+        for kind, p in zip(xlstm_block_kinds(cfg), params["blocks"]):
+            fn = xlstm_mod.mlstm if kind == "mlstm" else xlstm_mod.slstm
+            x, _ = _remat(lambda x, p, fn=fn: fn(ctx, p, cfg, x, valid),
+                          remat)(x, p)
+    else:
+        def body(x, p):
+            y, _, _ = _layer_fwd(cfg, ctx, p, x, valid, None, None, 0,
+                                 q_chunk, kv_chunk)
+            return y, None
+
+        x, _ = jax.lax.scan(_remat(body, remat), x, params["layers"])
+
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = col_dense(ctx, params["lm_head"], x, cfg.vocab, valid)
+    return logits.astype(jnp.float32)
+
+
+# --------------------------------------------------------------- decode ----
+
+def init_decode_state(cfg, ctx: TPCtx, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> Params:
+    state: Params = {}
+    if cfg.ssm_kind == "xlstm":
+        st = []
+        for kind in xlstm_block_kinds(cfg):
+            init = xlstm_mod.init_slstm_state if kind == "slstm" \
+                else xlstm_mod.init_mlstm_state
+            st.append(init(cfg, batch))
+        state["blocks"] = st
+        return state
+
+    def one(_):
+        return attn_mod.init_cache(cfg, batch, max_len, dtype, tp=ctx.tp)
+
+    state["kv"] = jax.vmap(one)(jnp.arange(cfg.n_layers))
+    if cfg.family == "hybrid":
+        state["mamba"] = jax.vmap(
+            lambda _: mamba_mod.init_mamba_state(cfg, batch, dtype))(
+            jnp.arange(cfg.n_layers))
+    return state
+
+
+def decode_step(cfg, params: Params, ctx: TPCtx, state: Params,
+                tokens: jax.Array, valid: jax.Array | None = None,
+                *, kv_chunk: int = 1024, last_only: bool = False
+                ) -> tuple[jax.Array, Params]:
+    """tokens: [B, s] (s=1 for pure decode) -> (logits [B, s, V], state).
+
+    last_only: compute logits for the final position only (prefill returns
+    the cache + one logit row; computing [B, 32k, 150k] logits would be
+    hundreds of GB of dead temps)."""
+    x = params["embed"][tokens].astype(params["embed"].dtype)
+    x = ctx.shard_act(x)
+
+    if cfg.ssm_kind == "xlstm":
+        new_states = []
+        for kind, p, st in zip(xlstm_block_kinds(cfg), params["blocks"],
+                               state["blocks"]):
+            fn = xlstm_mod.mlstm if kind == "mlstm" else xlstm_mod.slstm
+            x, new_st = fn(ctx, p, cfg, x, valid, st)
+            new_states.append(new_st)
+        if last_only:
+            x = x[:, -1:]
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = col_dense(ctx, params["lm_head"], x, cfg.vocab, valid)
+        return logits.astype(jnp.float32), {"blocks": new_states}
+
+    pos = state["kv"]["len"][0]  # same for all layers
+
+    def body(x, inp):
+        p, cache, ms = inp
+        y, new_cache, new_ms = _layer_fwd(cfg, ctx, p, x, valid, cache, ms,
+                                          pos, tokens.shape[1], kv_chunk)
+        return y, (new_cache, new_ms)
+
+    ms = state.get("mamba")
+    if ms is None:
+        x, (new_kv, _) = jax.lax.scan(
+            lambda x, inp: body(x, (inp[0], inp[1], None)),
+            x, (params["layers"], state["kv"]))
+        new_state = {"kv": new_kv}
+    else:
+        x, (new_kv, new_ms) = jax.lax.scan(
+            body, x, (params["layers"], state["kv"], ms))
+        new_state = {"kv": new_kv, "mamba": new_ms}
+
+    if last_only:
+        x = x[:, -1:]
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = col_dense(ctx, params["lm_head"], x, cfg.vocab, valid)
+    return logits.astype(jnp.float32), new_state

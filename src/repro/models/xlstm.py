@@ -1,0 +1,244 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory, strictly recurrent) — arXiv:2405.04517, simplified but faithful
+exponential-gating + stabilizer math.
+
+CDC applies to the up/qkv projections (column-parallel, output split); the
+recurrences are per-head shard-local ops between coded GEMM boundaries.
+State is O(1) in sequence length => long_500k decode is runnable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (Params, TPCtx, chunked_time_scan,
+                                 col_dense, layernorm, layernorm_init,
+                                 linear_init, row_dense)
+
+
+# ------------------------------------------------------------- mLSTM -------
+
+def mlstm_init(key, cfg, ctx: TPCtx, dtype) -> Params:
+    d = cfg.d_model
+    du = 2 * d  # up-projection factor 2
+    nh = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": layernorm_init(d, jnp.float32),
+        "up": linear_init(ks[0], d, 2 * du, ctx, dtype),  # x_m and gate z
+        "wq": linear_init(ks[1], du, du, ctx, dtype),
+        "wk": linear_init(ks[2], du, du, ctx, dtype),
+        "wv": linear_init(ks[3], du, du, ctx, dtype),
+        "wif": (jax.random.normal(ks[4], (du, 2 * nh), jnp.float32)
+                / du ** 0.5).astype(dtype),
+        "b_if": jnp.zeros((2 * nh,), jnp.float32),
+        "down": linear_init(ks[5], du, d, ctx, dtype,
+                            scale=1.0 / du ** 0.5, coded=False),
+    }
+
+
+def _mlstm_chunkwise(q, k, v, i_raw, f_log, c0, n0, m0, chunk: int = 128):
+    """Chunkwise-parallel mLSTM (xLSTM appendix / GLA-style).
+
+    §Perf hillclimb 1: the sequential scan reads+writes the [B,nh,dh,dh]
+    matrix memory EVERY timestep — ~10 TB of HBM traffic per train step for
+    xlstm-125m (measured: memory term 82 s). The recurrence is linear in C
+    between gate applications, so a W-token chunk folds into:
+      intra-chunk: causal attention-like matmuls with decay weights
+                   A[t,tau] = exp(g_tau - M_t) * (q_t . k_tau)
+      inter-chunk: C carried ONCE per chunk boundary.
+    Stabilized with M_t = max(m0, cummax g), all exponents <= 0.
+
+    q,k,v: [B, W*, nh, dh] per chunk slices; gates [B, W*, nh].
+    Returns (h [B, S, nh, dh], (C, n, m) final).
+    """
+    b, s, nh, dh = q.shape
+    w = min(chunk, s)
+    if s % w:
+        pad = w - s % w
+        zq = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(a, zq) for a in (q, k, v))
+        # padded steps: i = -inf (no write), f = 0 (keep state)
+        i_raw = jnp.pad(i_raw, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e30)
+        f_log = jnp.pad(f_log, ((0, 0), (0, pad), (0, 0)))
+    n_chunks = q.shape[1] // w
+
+    def to_chunks(a):
+        return jnp.moveaxis(
+            a.reshape((b, n_chunks, w) + a.shape[2:]), 1, 0)
+
+    xs = tuple(map(to_chunks, (q, k, v, i_raw, f_log)))
+
+    def chunk_step(carry, inp):
+        c, n, m = carry  # [B,nh,dh,dh], [B,nh,dh], [B,nh]
+        qi, ki, vi, ii, fi = inp  # [B,w,nh,dh] x3, [B,w,nh] x2
+        F = jnp.cumsum(fi, axis=1)                     # [B,w,nh]
+        g = ii - F
+        M = jnp.maximum(jax.lax.cummax(g, axis=1), m[:, None])
+        scores = jnp.einsum("bthd,bchd->bhtc", qi, ki,
+                            preferred_element_type=jnp.float32)
+        decay = jnp.exp(jnp.moveaxis(g, 1, 2)[:, :, None, :]
+                        - jnp.moveaxis(M, 1, 2)[:, :, :, None])
+        causal = jnp.tril(jnp.ones((w, w), bool))
+        A = jnp.where(causal[None, None], scores * decay, 0.0)
+        inter = jnp.exp(m[:, None] - M)                # [B,w,nh]
+        num = jnp.einsum("bhij,bthj->bthi", c, qi) * inter[..., None] \
+            + jnp.einsum("bhtc,bchd->bthd", A, vi.astype(jnp.float32))
+        den = jnp.einsum("bhj,bthj->bth", n, qi) * inter \
+            + A.sum(-1).transpose(0, 2, 1)
+        h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+        # chunk-end state
+        wN = jnp.exp(g - M[:, -1:, :])                 # [B,w,nh]
+        keep = jnp.exp(m - M[:, -1])                   # [B,nh]
+        c_new = c * keep[..., None, None] \
+            + jnp.einsum("bchd,bche,bch->bhde", vi.astype(jnp.float32),
+                         ki.astype(jnp.float32), wN)
+        n_new = n * keep[..., None] \
+            + jnp.einsum("bche,bch->bhe", ki.astype(jnp.float32), wN)
+        # m_W = F_W + M_W where M_W = max(m0, max_tau g_tau)
+        m_new = F[:, -1] + jnp.maximum(jnp.max(g, axis=1), m)
+        return (c_new, n_new, m_new), h
+
+    (cT, nT, mT), hs = jax.lax.scan(chunk_step, (c0, n0, m0), xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, n_chunks * w, nh, dh)[:, :s]
+    return h, (cT, nT, mT)
+
+
+def mlstm(ctx: TPCtx, p: Params, cfg, x: jax.Array, valid=None,
+          state: Params | None = None):
+    """x: [B, S, D] -> ([B, S, D], state). Matrix memory C: [B, nh, dh, dh]."""
+    b, s, d = x.shape
+    du = 2 * d
+    nh = cfg.n_heads
+    dh = du // nh
+    xn = layernorm(p["norm"], x, cfg.norm_eps)
+    up = col_dense(ctx, p["up"], xn, 2 * du, valid)
+    xm, z = up[..., :du], up[..., du:]
+
+    q = col_dense(ctx, p["wq"], xm, du, valid).reshape(b, s, nh, dh)
+    k = col_dense(ctx, p["wk"], xm, du, valid).reshape(b, s, nh, dh) \
+        / dh ** 0.5
+    v = col_dense(ctx, p["wv"], xm, du, valid).reshape(b, s, nh, dh)
+
+    gates = (xm @ p["wif"]).astype(jnp.float32) + p["b_if"]  # [B, S, 2nh]
+    i_raw, f_raw = gates[..., :nh], gates[..., nh:]
+    f_log = -jax.nn.softplus(-f_raw)  # log sigmoid(f)
+
+    if state is None:
+        c0 = jnp.zeros((b, nh, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, nh, dh), jnp.float32)
+        m0 = jnp.full((b, nh), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = state["c"], state["n"], state["m"]
+
+    def step(carry, inp):
+        c, n, m = carry
+        qi, ki, vi, ii, fi = inp  # [B,nh,dh] x3, [B,nh] x2
+        m_new = jnp.maximum(fi + m, ii)
+        i_g = jnp.exp(ii - m_new)[..., None]
+        f_g = jnp.exp(fi + m - m_new)[..., None]
+        c = f_g[..., None] * c + i_g[..., None] * \
+            (vi[..., :, None] * ki[..., None, :])  # [B,nh,dh,dh]
+        n = f_g * n + i_g * ki
+        num = jnp.einsum("bhij,bhj->bhi", c, qi)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, qi)), 1.0)
+        h = num / den[..., None]
+        return (c, n, m_new), h
+
+    if s > 1:  # chunkwise-parallel form (matmuls; §Perf hillclimb 1)
+        h4, (cT, nT, mT) = _mlstm_chunkwise(
+            q.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), i_raw, f_log, c0, n0, m0)
+        h = h4.reshape(b, s, du).astype(x.dtype)
+    else:  # decode: one sequential step
+        xs = (jnp.moveaxis(q.astype(jnp.float32), 1, 0),
+              jnp.moveaxis(k.astype(jnp.float32), 1, 0),
+              jnp.moveaxis(v.astype(jnp.float32), 1, 0),
+              jnp.moveaxis(i_raw, 1, 0), jnp.moveaxis(f_log, 1, 0))
+        (cT, nT, mT), hs = chunked_time_scan(step, (c0, n0, m0), xs)
+        h = jnp.moveaxis(hs, 0, 1).reshape(b, s, du).astype(x.dtype)
+    h = h * jax.nn.silu(z)
+    out = row_dense(ctx, p["down"], h)
+    return x + out, {"c": cT, "n": nT, "m": mT}
+
+
+def init_mlstm_state(cfg, batch: int) -> Params:
+    du = 2 * cfg.d_model
+    nh = cfg.n_heads
+    dh = du // nh
+    return {"c": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, nh, dh), jnp.float32),
+            "m": jnp.full((batch, nh), -1e30, jnp.float32)}
+
+
+# ------------------------------------------------------------- sLSTM -------
+
+def slstm_init(key, cfg, ctx: TPCtx, dtype) -> Params:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    ks = jax.random.split(key, 4)
+    return {
+        "norm": layernorm_init(d, jnp.float32),
+        "wx": linear_init(ks[0], d, 4 * d, ctx, dtype),   # z, i, f, o
+        "r": (jax.random.normal(ks[1], (nh, dh, 4 * dh), jnp.float32)
+              / dh ** 0.5).astype(dtype),                 # block-diag recur.
+        "bias": jnp.zeros((4 * d,), jnp.float32),
+        "down": linear_init(ks[2], d, d, ctx, dtype,
+                            scale=1.0 / d ** 0.5, coded=False),
+    }
+
+
+def slstm(ctx: TPCtx, p: Params, cfg, x: jax.Array, valid=None,
+          state: Params | None = None):
+    """Strictly recurrent scalar LSTM with exponential gating."""
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    dh = d // nh
+    xn = layernorm(p["norm"], x, cfg.norm_eps)
+    wx = col_dense(ctx, p["wx"], xn, 4 * d, valid)  # [B, S, 4D]
+
+    if state is None:
+        h0 = jnp.zeros((b, nh, dh), jnp.float32)
+        c0 = jnp.zeros((b, nh, dh), jnp.float32)
+        n0 = jnp.ones((b, nh, dh), jnp.float32)
+        m0 = jnp.zeros((b, nh, dh), jnp.float32)
+    else:
+        h0, c0, n0, m0 = (state["h"], state["c"], state["n"], state["m"])
+
+    r = p["r"].astype(jnp.float32)
+    bias = p["bias"]
+
+    def step(carry, wxt):
+        h, c, n, m = carry  # [B, nh, dh]
+        rec = jnp.einsum("bhi,hij->bhj", h, r)  # [B, nh, 4dh]
+        pre = wxt.astype(jnp.float32).reshape(b, nh, 4 * dh) + rec \
+            + bias.reshape(nh, 4 * dh)[None]
+        zt, it, ft, ot = jnp.split(pre, 4, axis=-1)
+        zt = jnp.tanh(zt)
+        ot = jax.nn.sigmoid(ot)
+        f_log = -jax.nn.softplus(-ft)
+        m_new = jnp.maximum(f_log + m, it)
+        i_g = jnp.exp(it - m_new)
+        f_g = jnp.exp(f_log + m - m_new)
+        c = f_g * c + i_g * zt
+        n = f_g * n + i_g
+        h = ot * c / jnp.maximum(n, 1.0)
+        return (h, c, n, m_new), h
+
+    # reshape wx so each head's 4 gates are contiguous: [B,S,nh,4dh]
+    wxs = wx.reshape(b, s, 4, nh, dh)
+    wxs = jnp.moveaxis(wxs, 2, 3).reshape(b, s, nh, 4 * dh)
+    (hT, cT, nT, mT), hs = chunked_time_scan(
+        step, (h0, c0, n0, m0), jnp.moveaxis(wxs, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    out = row_dense(ctx, p["down"], h)
+    return x + out, {"h": hT, "c": cT, "n": nT, "m": mT}
+
+
+def init_slstm_state(cfg, batch: int) -> Params:
+    nh = cfg.n_heads
+    dh = cfg.d_model // nh
+    z = jnp.zeros((batch, nh, dh), jnp.float32)
+    return {"h": z, "c": z, "n": jnp.ones_like(z), "m": z}

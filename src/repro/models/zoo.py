@@ -1,0 +1,96 @@
+"""Uniform model API over all assigned architecture families.
+
+Model(cfg, ctx) exposes:
+  init(key, dtype)                      -> params
+  forward(params, batch, valid=None)    -> logits       (train / prefill)
+  init_decode(params, batch_inputs, b, max_len) -> state
+  decode(params, state, tokens, valid=None) -> (logits, state)
+  input_spec(shape, dtype)              -> ShapeDtypeStruct batch stand-ins
+
+``batch`` is a dict: {"tokens": [B, S]} for LMs; whisper adds
+{"frames": [B, enc_seq, D]} (frontend stub); chameleon's VQ image tokens are
+ordinary ids in the 65536 vocab (tokenizer stub).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+from repro.models.common import TPCtx, encode_tree
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: Any
+    ctx: TPCtx
+
+    # ---------------------------------------------------------- params ----
+    def init(self, key, dtype=jnp.float32) -> Params:
+        if self.cfg.is_encdec:
+            return encdec.init_params(self.cfg, key, self.ctx, dtype)
+        return transformer.init_params(self.cfg, key, self.ctx, dtype)
+
+    def encode_offline(self, params: Params) -> Params:
+        """The paper's offline CDC weight encode (rerun after weight load)."""
+        return encode_tree(params, self.ctx)
+
+    # --------------------------------------------------------- forward ----
+    def forward(self, params: Params, batch: dict, valid=None, *,
+                remat: str = "full", q_chunk: int = 512,
+                kv_chunk: int = 1024) -> jax.Array:
+        if self.cfg.is_encdec:
+            return encdec.forward(self.cfg, params, self.ctx,
+                                  batch["tokens"], batch["frames"], valid,
+                                  remat=remat, q_chunk=q_chunk,
+                                  kv_chunk=kv_chunk)
+        return transformer.forward(self.cfg, params, self.ctx,
+                                   batch["tokens"], valid, remat=remat,
+                                   q_chunk=q_chunk, kv_chunk=kv_chunk)
+
+    # ---------------------------------------------------------- decode ----
+    def init_decode(self, params: Params, batch: dict, b: int, max_len: int,
+                    dtype=jnp.bfloat16, valid=None) -> Params:
+        if self.cfg.is_encdec:
+            return encdec.init_decode_state(self.cfg, self.ctx, params,
+                                            batch["frames"], b, max_len,
+                                            dtype, valid)
+        return transformer.init_decode_state(self.cfg, self.ctx, b, max_len,
+                                             dtype)
+
+    def decode(self, params: Params, state: Params, tokens: jax.Array,
+               valid=None, *, kv_chunk: int = 1024, last_only: bool = False):
+        if self.cfg.is_encdec:
+            return encdec.decode_step(self.cfg, params, self.ctx, state,
+                                      tokens, valid, kv_chunk=kv_chunk,
+                                      last_only=last_only)
+        return transformer.decode_step(self.cfg, params, self.ctx, state,
+                                       tokens, valid, kv_chunk=kv_chunk,
+                                       last_only=last_only)
+
+    # ----------------------------------------------------------- specs ----
+    def input_spec(self, batch: int, seq: int, dtype=jnp.bfloat16) -> dict:
+        spec = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+        if self.cfg.is_encdec:
+            spec["frames"] = jax.ShapeDtypeStruct(
+                (batch, self.cfg.enc_seq, self.cfg.d_model), dtype)
+        return spec
+
+    def dummy_batch(self, key, batch: int, seq: int, dtype=jnp.float32
+                    ) -> dict:
+        kt, kf = jax.random.split(key)
+        out = {"tokens": jax.random.randint(kt, (batch, seq), 0,
+                                            self.cfg.vocab, jnp.int32)}
+        if self.cfg.is_encdec:
+            out["frames"] = jax.random.normal(
+                kf, (batch, self.cfg.enc_seq, self.cfg.d_model), dtype)
+        return out
+
+
+def build(cfg, ctx: TPCtx | None = None) -> Model:
+    return Model(cfg, ctx or TPCtx())

@@ -1,0 +1,2 @@
+from repro.optim.adamw import (AdamWConfig, apply_updates, global_norm,
+                               init_state, lr_at)

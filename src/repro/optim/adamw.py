@@ -1,0 +1,101 @@
+"""AdamW + LR schedules + global-norm clipping, from scratch (no optax).
+
+Mixed precision: params may be bf16; master copies and moments are fp32 and
+inherit the parameter sharding (FSDP shards optimizer state for free).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    schedule: str = "cosine"  # cosine | constant
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        return cfg.lr * warm
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def init_state(params: Any) -> dict:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": zeros,
+        "nu": jax.tree.map(jnp.zeros_like, zeros),
+        # copy=True: fp32 params must NOT alias the master buffer (both
+        # are donated by the train step)
+        "master": jax.tree.map(
+            lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def _decay_mask(params: Any) -> Any:
+    """No weight decay on 1-D params (norm gains, biases)."""
+    return jax.tree.map(lambda p: jnp.asarray(p.ndim >= 2), params)
+
+
+def apply_updates(cfg: AdamWConfig, params: Any, grads: Any, state: dict
+                  ) -> tuple[Any, dict, dict]:
+    """One AdamW step. Returns (params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip else jnp.float32(1.0)
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+    mask = _decay_mask(params)
+
+    def upd(m, v, g, p, use_decay):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        delta = delta + cfg.weight_decay * jnp.where(use_decay, p, 0.0)
+        return m, v, p - lr * delta
+
+    flat_m, treedef = jax.tree.flatten(state["mu"])
+    flat_v = jax.tree.leaves(state["nu"])
+    flat_g = jax.tree.leaves(grads)
+    flat_p = jax.tree.leaves(state["master"])
+    flat_mask = jax.tree.leaves(mask)
+    out = [upd(m, v, g, p, dk) for m, v, g, p, dk in
+           zip(flat_m, flat_v, flat_g, flat_p, flat_mask)]
+    mu = jax.tree.unflatten(treedef, [o[0] for o in out])
+    nu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    master = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_params = jax.tree.map(
+        lambda mp, p: mp.astype(p.dtype), master, params)
+    new_state = {"step": step, "mu": mu, "nu": nu, "master": master}
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics

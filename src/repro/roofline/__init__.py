@@ -1,0 +1,2 @@
+from repro.roofline.analysis import (HW, collective_bytes, roofline_report,
+                                     roofline_terms)

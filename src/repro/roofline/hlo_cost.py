@@ -1,0 +1,249 @@
+"""Trip-count-weighted cost analysis over compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts every computation ONCE — a
+lax.scan over 95 layers or a 16-microbatch accumulation loop reports 1/95th
+/ 1/16th of the real FLOPs (verified empirically; see EXPERIMENTS.md §Perf
+lesson 0). Since the entire framework leans on scan-over-layers, the
+roofline needs a loop-aware model. This module parses the compiled module:
+
+  * per-computation local costs:
+      flops: dot/convolution ops (2 * prod(out) * prod(contracted dims))
+      bytes: sum of (operands + output) bytes of top-level kernels
+             (fusion boundaries == HBM round trips; control ops skipped)
+      wire:  ring-model collective bytes (same model as analysis.py)
+  * call graph with multiplicities:
+      while bodies x known_trip_count (backend_config annotation)
+      fusion calls contribute flops only (their bytes are the fusion
+      boundary, already counted at the call site)
+  * total = weighted sum over the ENTRY computation.
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_TOKEN = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->")
+_OP_RE = re.compile(r"^\s*(?:\([^)]*\)|\S+)\s+([\w\-]+)\(")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OPERANDS_RE = re.compile(r"\(%([\w\.\-]+)(?:,\s*%([\w\.\-]+))*")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+_CONTROL_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "token", "iota", "partition-id", "replica-id",
+}
+_COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute"}
+
+
+def _dims(shape_str):
+    out = []
+    for m in _SHAPE_TOKEN.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        d = [int(x) for x in dims.split(",") if x]
+        out.append((dt, d))
+    return out
+
+
+def _bytes(shape_str):
+    total = 0
+    for dt, d in _dims(shape_str):
+        n = 1
+        for x in d:
+            n *= x
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def analyze_hlo(text: str) -> dict:
+    # ---- pass 1: split computations, map op name -> (shape_str, line) ----
+    comps: dict[str, list[str]] = {}
+    shapes: dict[str, str] = {}
+    cur = None
+    entry = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR.match(line)
+        if hdr and line.endswith("{"):
+            cur = hdr.group(1)
+            comps[cur] = []
+            if line.startswith("ENTRY"):
+                entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        comps[cur].append(line)
+        d = _DEF_RE.match(line)
+        if d:
+            rhs = d.group(2)
+            # shape is the leading type token(s) before the op name
+            shapes[d.group(1)] = rhs.split(" ")[0] if not \
+                rhs.startswith("(") else rhs[:rhs.index(")") + 1]
+
+    # ---- pass 2: per-computation local costs + child edges ----
+    local = {c: {"flops": 0.0, "bytes": 0.0, "wire": 0.0,
+                 "wire_by_kind": defaultdict(float),
+                 "coll_counts": defaultdict(int)}
+             for c in comps}
+    children: dict[str, list[tuple[str, float, bool]]] = \
+        {c: [] for c in comps}  # (child, multiplier, flops_only)
+    fusion_bodies: set[str] = set()
+
+    for cname, lines in comps.items():
+        for line in lines:
+            d = _DEF_RE.match(line)
+            if not d:
+                continue
+            name, rhs = d.group(1), d.group(2)
+            shape_str = shapes.get(name, "")
+            opm = _OP_RE.match(rhs)
+            op = opm.group(1) if opm else ""
+
+            if op in ("dot", "convolution"):
+                out_elems = 1
+                for _, dd in _dims(shape_str):
+                    for x in dd:
+                        out_elems *= x
+                contracted = 1
+                cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+                oper = re.search(r"\(%([\w\.\-]+)", rhs)
+                if cm and oper and oper.group(1) in shapes:
+                    lhs_dims = _dims(shapes[oper.group(1)])
+                    if lhs_dims:
+                        dd = lhs_dims[0][1]
+                        for i in (cm.group(1).split(",")
+                                  if cm.group(1) else []):
+                            if i and int(i) < len(dd):
+                                contracted *= dd[int(i)]
+                local[cname]["flops"] += 2.0 * out_elems * contracted
+
+            if op == "while":
+                body = _CALLS_RE.search(rhs)
+                cond = _COND_RE.search(rhs)
+                trip = _TRIP_RE.search(rhs)
+                n = float(trip.group(1)) if trip else 1.0
+                if body:
+                    children[cname].append((body.group(1), n, False))
+                if cond:
+                    children[cname].append((cond.group(1), n, False))
+            elif op in ("fusion", "call", "custom-call", "reduce", "scatter",
+                        "sort", "map", "conditional", "select-and-scatter",
+                        "reduce-window", "all-reduce", "reduce-scatter"):
+                cm = _CALLS_RE.search(rhs)
+                if cm and cm.group(1) in comps:
+                    if op == "fusion":
+                        fusion_bodies.add(cm.group(1))
+                        children[cname].append((cm.group(1), 1.0, True))
+                    elif op in ("call", "conditional"):
+                        children[cname].append((cm.group(1), 1.0, False))
+                    else:
+                        # scalar lambdas (reduce combiner etc.): negligible
+                        fusion_bodies.add(cm.group(1))
+
+            # ---- bytes: top-level kernels only ----
+            if op and op not in _CONTROL_OPS and op != "while":
+                if op in ("dynamic-update-slice", "scatter"):
+                    # in-place (aliased/donated) updates: traffic is the
+                    # update region, not the whole buffer
+                    ops_ = re.findall(r"%([\w\.\-]+)",
+                                      rhs.split("),")[0])
+                    upd = _bytes(shapes.get(ops_[1], "")) if \
+                        len(ops_) > 1 else 0
+                    local[cname]["bytes"] += 2 * upd
+                else:
+                    b = _bytes(shape_str)
+                    for on in re.findall(r"%([\w\.\-]+)",
+                                         rhs.split("),")[0]):
+                        if on in shapes and on != name:
+                            b += _bytes(shapes[on])
+                    local[cname]["bytes"] += b
+
+            # ---- collectives (count -start, skip -done) ----
+            base = op.replace("-start", "")
+            if base in _COLLECTIVES and not op.endswith("-done"):
+                bytes_ = _bytes(shape_str)
+                gm = _GROUPS_RE.search(rhs)
+                if gm:
+                    k = len(gm.group(1).split(","))
+                else:
+                    gi = _GROUPS_IOTA_RE.search(rhs)
+                    k = int(gi.group(2)) if gi else 2
+                k = max(k, 2)
+                if base == "all-gather":
+                    wire = bytes_ * (k - 1) / k
+                elif base == "all-reduce":
+                    wire = 2 * bytes_ * (k - 1) / k
+                elif base == "reduce-scatter":
+                    wire = bytes_ * (k - 1)
+                elif base == "all-to-all":
+                    wire = bytes_ * (k - 1) / k
+                else:
+                    wire = bytes_
+                local[cname]["wire"] += wire
+                local[cname]["wire_by_kind"][base] += wire
+                local[cname]["coll_counts"][base] += 1
+
+    # fusion bodies: their bytes are the fusion boundary (already counted)
+    for f in fusion_bodies:
+        if f in local:
+            local[f]["bytes"] = 0.0
+
+    # ---- pass 3: weighted totals from ENTRY ----
+    memo: dict[tuple[str, bool], dict] = {}
+
+    def total(c: str, flops_only: bool) -> dict:
+        key = (c, flops_only)
+        if key in memo:
+            return memo[key]
+        memo[key] = {"flops": 0.0, "bytes": 0.0, "wire": 0.0,
+                     "wire_by_kind": defaultdict(float),
+                     "coll_counts": defaultdict(float)}  # cycle guard
+        loc = local[c]
+        acc = {"flops": loc["flops"],
+               "bytes": 0.0 if flops_only else loc["bytes"],
+               "wire": 0.0 if flops_only else loc["wire"],
+               "wire_by_kind": defaultdict(
+                   float, {} if flops_only else dict(loc["wire_by_kind"])),
+               "coll_counts": defaultdict(
+                   float, {} if flops_only else dict(loc["coll_counts"]))}
+        for child, mult, f_only in children.get(c, []):
+            if child not in comps:
+                continue
+            sub = total(child, flops_only or f_only)
+            acc["flops"] += mult * sub["flops"]
+            acc["bytes"] += mult * sub["bytes"]
+            acc["wire"] += mult * sub["wire"]
+            for k, v in sub["wire_by_kind"].items():
+                acc["wire_by_kind"][k] += mult * v
+            for k, v in sub["coll_counts"].items():
+                acc["coll_counts"][k] += mult * v
+        memo[key] = acc
+        return acc
+
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    result = total(entry, False)
+    return {
+        "flops": result["flops"],
+        "bytes": result["bytes"],
+        "wire_bytes": result["wire"],
+        "wire_by_kind": dict(result["wire_by_kind"]),
+        "collective_counts": dict(result["coll_counts"]),
+    }

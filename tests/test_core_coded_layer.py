@@ -1,0 +1,169 @@
+"""Tests for the coded GEMM layer: folded + dedicated layouts, conv, policy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (TABLE_1, CodedDenseSpec, CodeSpec, coded_conv2d,
+                        coded_matmul, conv2d_gemm, make_parity_weights,
+                        pad_for_code, suitability_table)
+from repro.core.coded_layer import folded_slot_map, unfold_parity, \
+    fold_parity_slots
+
+
+def _mk(key, T, r, k=16, m=None, batch=3, layout="folded"):
+    m = m or T * T * 4
+    kx, kw = jax.random.split(jax.random.PRNGKey(key))
+    x = jax.random.normal(kx, (batch, k), jnp.float32)
+    w = jax.random.normal(kw, (k, m), jnp.float32) / np.sqrt(k)
+    spec = CodedDenseSpec(CodeSpec(T, r), layout=layout)
+    w_cdc = make_parity_weights(w, spec) if r else None
+    return x, w, w_cdc, spec
+
+
+def test_uncoded_path_is_plain_matmul():
+    x, w, _, spec = _mk(0, T=4, r=0)
+    y = coded_matmul(x, w, None, spec)
+    np.testing.assert_allclose(y, x @ w, rtol=1e-5, atol=1e-5)
+
+
+def test_all_valid_equals_plain_matmul():
+    x, w, w_cdc, spec = _mk(1, T=4, r=2)
+    valid = jnp.ones(4, bool)
+    y = coded_matmul(x, w, w_cdc, spec, valid)
+    np.testing.assert_allclose(y, x @ w, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("T,r", [(2, 2), (4, 2), (8, 2), (16, 2), (8, 4)])
+def test_folded_recovers_single_device_failure(T, r):
+    """The TPU-native layout: any ONE dead device (data shard + its folded
+    parity slices both lost) is recovered exactly."""
+    x, w, w_cdc, spec = _mk(2, T=T, r=r)
+    ref = x @ w
+    for dead in range(T):
+        valid = jnp.ones(T, bool).at[dead].set(False)
+        y = coded_matmul(x, w, w_cdc, spec, valid)
+        np.testing.assert_allclose(y, ref, rtol=1e-3, atol=1e-3), dead
+
+
+def test_folded_r4_recovers_two_device_failures():
+    T, r = 8, 4
+    x, w, w_cdc, spec = _mk(3, T=T, r=r)
+    ref = x @ w
+    for dead in [(0, 1), (2, 5), (6, 7), (0, 7)]:
+        valid = jnp.ones(T, bool).at[jnp.asarray(dead)].set(False)
+        y = coded_matmul(x, w, w_cdc, spec, valid)
+        np.testing.assert_allclose(y, ref, rtol=2e-3, atol=2e-3), dead
+
+
+def test_folded_r1_recovers_lost_message():
+    """Paper's r=1 sum code under the message-erasure model: the data-shard
+    message is lost but parity messages arrive."""
+    T = 4
+    x, w, w_cdc, spec = _mk(4, T=T, r=1)
+    ref = x @ w
+    for dead in range(T):
+        valid = jnp.ones(T, bool).at[dead].set(False)
+        y = coded_matmul(x, w, w_cdc, spec, valid,
+                         valid_parity=jnp.ones(T, bool))
+        np.testing.assert_allclose(y, ref, rtol=1e-3, atol=1e-3), dead
+
+
+@pytest.mark.parametrize("T,r,nfail", [(4, 1, 1), (4, 2, 2), (8, 2, 2)])
+def test_dedicated_layout_paper_scheme(T, r, nfail):
+    """Paper-faithful +r-devices layout: parity on its own shard slots."""
+    x, w, w_cdc, spec = _mk(5, T=T, r=r, layout="dedicated")
+    ref = x @ w
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        dead = rng.choice(T, nfail, replace=False)
+        valid = jnp.ones(T, bool).at[jnp.asarray(dead)].set(False)
+        y = coded_matmul(x, w, w_cdc, spec, valid)
+        np.testing.assert_allclose(y, ref, rtol=5e-3, atol=5e-3)
+
+
+def test_slot_map_stagger_property():
+    """No device holds two parity slices protecting the same output column:
+    failure of one device kills <= 1 equation per column."""
+    for T, r in [(4, 2), (8, 3), (16, 4)]:
+        smap = folded_slot_map(T, r)
+        for s in range(T):
+            slots = smap[:, s]
+            assert len(set(slots.tolist())) == r, (T, r, s)
+            # data shard s itself must not host a parity slice of column
+            # block s... (it may; what matters is distinctness across j)
+
+
+def test_fold_unfold_roundtrip():
+    T, r, k, m_l = 8, 3, 5, 16
+    parity = jnp.arange(r * k * m_l, dtype=jnp.float32).reshape(r, k, m_l)
+    slots = fold_parity_slots(parity, T)  # [T, k, r*w]
+    # simulate "outputs": identity input so outputs == weights
+    back = unfold_parity(jnp.moveaxis(slots, 1, 1), T, r)
+    np.testing.assert_allclose(back, parity)
+
+
+def test_grad_flows_through_coded_matmul():
+    x, w, w_cdc, spec = _mk(6, T=4, r=2)
+    valid = jnp.ones(4, bool).at[1].set(False)
+
+    def loss(w):
+        w_cdc = make_parity_weights(w, spec)
+        return coded_matmul(x, w, w_cdc, spec, valid).sum()
+
+    g = jax.grad(loss)(w)
+    assert np.all(np.isfinite(np.asarray(g)))
+
+
+def test_pad_for_code():
+    assert pad_for_code(100, 4, align=8) == 128
+    assert pad_for_code(49155, 16, align=8) % (16 * 16 * 8) == 0
+    assert pad_for_code(2048, 16, align=8) == 2048
+
+
+@settings(max_examples=25, deadline=None)
+@given(T=st.sampled_from([2, 4, 8]), dead=st.integers(0, 7),
+       batch=st.integers(1, 4))
+def test_property_folded_single_failure(T, dead, batch):
+    dead = dead % T
+    x, w, w_cdc, spec = _mk(7 + T, T=T, r=2, batch=batch)
+    valid = jnp.ones(T, bool).at[dead].set(False)
+    y = coded_matmul(x, w, w_cdc, spec, valid)
+    np.testing.assert_allclose(y, x @ w, rtol=2e-3, atol=2e-3)
+
+
+# ---- conv / channel splitting (paper Fig. 8: == output splitting) ----
+
+def test_conv_gemm_matches_lax_conv():
+    key = jax.random.PRNGKey(11)
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (2, 8, 8, 3), jnp.float32)
+    f = jax.random.normal(kw, (3, 3, 3, 8), jnp.float32)
+    ours = conv2d_gemm(x, f)
+    ref = jax.lax.conv_general_dilated(
+        x, f, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    np.testing.assert_allclose(ours, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_coded_conv_channel_split_recovers():
+    key = jax.random.PRNGKey(12)
+    kx, kw = jax.random.split(key)
+    T = 4
+    x = jax.random.normal(kx, (2, 6, 6, 3), jnp.float32)
+    filt = jax.random.normal(kw, (3, 3, 3, T * T * 2), jnp.float32)
+    spec = CodedDenseSpec(CodeSpec(T, 2))
+    w_cdc = make_parity_weights(
+        filt.reshape(-1, filt.shape[-1]), spec)
+    ref = conv2d_gemm(x, filt)
+    for dead in range(T):
+        valid = jnp.ones(T, bool).at[dead].set(False)
+        y = coded_conv2d(x, filt, w_cdc, spec, valid)
+        np.testing.assert_allclose(y, ref, rtol=1e-2, atol=1e-2)
+
+
+# ---- Table 1 policy ----
+
+def test_table1_reproduced():
+    table = {row["method"]: row["suitable"] for row in suitability_table()}
+    assert table == TABLE_1

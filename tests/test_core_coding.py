@@ -1,0 +1,108 @@
+"""Unit + property tests for the CDC coding algebra (paper §5.2-5.3, §7)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CodeSpec, decode_outputs, encode_outputs,
+                        encode_weights, generator_matrix,
+                        max_decode_condition)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def test_generator_r1_is_paper_sum_code():
+    gen = generator_matrix(7, 1)
+    np.testing.assert_allclose(gen, np.ones((1, 7)))
+
+
+def test_generator_rows_and_conditioning():
+    for t, r in [(4, 2), (8, 3), (16, 4), (16, 2)]:
+        gen = generator_matrix(t, r)
+        assert gen.shape == (r, t)
+        cond = max_decode_condition(CodeSpec(t, r))
+        assert np.isfinite(cond) and cond < 1e7, (t, r, cond)
+
+
+def test_encode_weights_matches_paper_eq7():
+    """W_cdc row = column sums of the stacked shard weights (Eq. 7/11)."""
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (4, 8, 16), jnp.float32)  # [T, k, m_l]
+    spec = CodeSpec(4, 1)
+    parity = encode_weights(w, spec)
+    np.testing.assert_allclose(parity[0], w.sum(0), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("t,r,n_fail", [(2, 1, 1), (4, 1, 1), (8, 1, 0),
+                                        (4, 2, 2), (8, 3, 3), (8, 3, 2),
+                                        (16, 4, 4), (16, 2, 1)])
+def test_decode_recovers_erasures(t, r, n_fail):
+    key = jax.random.PRNGKey(t * 100 + r * 10 + n_fail)
+    k1, k2 = jax.random.split(key)
+    y = jax.random.normal(k1, (t, 3, 32), jnp.float32)
+    spec = CodeSpec(t, r)
+    parity = encode_outputs(y, spec)
+    fail_idx = jax.random.choice(k2, t, (n_fail,), replace=False)
+    valid = jnp.ones(t, bool).at[fail_idx].set(False)
+    y_damaged = jnp.where(valid[:, None, None], y,
+                          jnp.nan)  # garbage in erased slots
+    y_damaged = jnp.nan_to_num(y_damaged, nan=1e9)
+    rec = decode_outputs(y_damaged, parity, valid, spec)
+    # fp32 tolerance scales with the decode submatrix conditioning (r big
+    # => worse-conditioned Vandermonde solve); see DESIGN.md §8.
+    tol = 2e-4 if r <= 2 else (2e-3 if n_fail <= 3 else 2e-2)
+    np.testing.assert_allclose(rec, y, rtol=tol, atol=tol)
+
+
+def test_decode_jit_and_grad_safe():
+    spec = CodeSpec(4, 2)
+    y = jnp.arange(4 * 6, dtype=jnp.float32).reshape(4, 6)
+    parity = encode_outputs(y, spec)
+    valid = jnp.array([True, False, True, True])
+
+    f = jax.jit(lambda y, p, v: decode_outputs(y, p, v, spec).sum())
+    assert np.isfinite(float(f(y, parity, valid)))
+    g = jax.grad(lambda y: decode_outputs(
+        y, encode_outputs(y, spec), valid, spec).sum())(y)
+    assert np.all(np.isfinite(np.asarray(g)))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    t=st.integers(2, 12),
+    r=st.integers(1, 3),
+    data=st.data(),
+)
+def test_property_any_r_erasures_decode(t, r, data):
+    """Property: for any (T, r <= T) and ANY erasure pattern of <= r shards,
+    decode reproduces the original outputs (MDS property over the reals)."""
+    r = min(r, t)
+    n_fail = data.draw(st.integers(0, r))
+    fail = sorted(data.draw(
+        st.permutations(range(t)))[:n_fail]) if n_fail else []
+    rng = np.random.default_rng(t * 1000 + r * 100 + n_fail)
+    y = jnp.asarray(rng.standard_normal((t, 5, 4)), jnp.float32)
+    spec = CodeSpec(t, r)
+    parity = encode_outputs(y, spec)
+    valid = jnp.ones(t, bool).at[jnp.asarray(fail, int)].set(
+        False) if fail else jnp.ones(t, bool)
+    y_damaged = y.at[jnp.asarray(fail, int)].set(123.456) if fail else y
+    rec = decode_outputs(y_damaged, parity, valid, spec)
+    np.testing.assert_allclose(rec, y, rtol=5e-3, atol=5e-3)
+
+
+def test_parity_linearity_weights_vs_outputs():
+    """Coding commutes with the GEMM: X @ W_cdc == sum_i gen[j,i] (X @ W_i).
+    This is the property that lets the paper do the encode OFFLINE."""
+    key = jax.random.PRNGKey(3)
+    kx, kw = jax.random.split(key)
+    T, k, m_l, b = 4, 12, 8, 5
+    x = jax.random.normal(kx, (b, k), jnp.float32)
+    w = jax.random.normal(kw, (T, k, m_l), jnp.float32)
+    spec = CodeSpec(T, 2)
+    w_parity = encode_weights(w, spec)                  # offline
+    via_weights = jnp.einsum("bk,rkm->rbm", x, w_parity)
+    ys = jnp.einsum("bk,tkm->tbm", x, w)
+    via_outputs = encode_outputs(ys, spec)
+    np.testing.assert_allclose(via_weights, via_outputs, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,112 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 128, 384),
+                                   (128, 512, 256), (384, 256, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_shapes_dtypes(m, k, n, dtype):
+    k1, k2 = jax.random.split(KEY)
+    x, w = _rand(k1, (m, k), dtype), _rand(k2, (k, n), dtype)
+    got = ops.matmul(x, w)
+    want = ref.matmul_ref(x, w)
+    # fp32: accumulation-order differences across K blocks, ~eps*sqrt(K)
+    tol = 1e-3 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_matmul_nonaligned_blocks():
+    """Block sizes clamp to dims when the matrix is smaller than a tile."""
+    k1, k2 = jax.random.split(KEY)
+    x, w = _rand(k1, (64, 32), jnp.float32), _rand(k2, (32, 64), jnp.float32)
+    np.testing.assert_allclose(ops.matmul(x, w), ref.matmul_ref(x, w),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("t,r", [(4, 1), (8, 2), (16, 4)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cdc_encode(t, r, dtype):
+    from repro.core.coding import generator_matrix
+    k1, _ = jax.random.split(KEY)
+    w = _rand(k1, (t, 256, 512), dtype)
+    gen = jnp.asarray(generator_matrix(t, r), jnp.float32)
+    got = ops.cdc_encode(w, gen)
+    want = ref.cdc_encode_ref(w, gen)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("t", [2, 4, 16])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cdc_decode_all_single_erasures(t, dtype):
+    k1, k2 = jax.random.split(KEY)
+    y = _rand(k1, (t, 128, 256), dtype)
+    parity = y.astype(jnp.float32).sum(0).astype(dtype)
+    for dead in [None, 0, t // 2, t - 1]:
+        valid = jnp.ones(t, bool)
+        if dead is not None:
+            valid = valid.at[dead].set(False)
+        got = ops.cdc_decode(y, parity, valid)
+        want = ref.cdc_decode_ref(y, parity, valid)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=1e-5, atol=1e-5)
+        # and the decode is actually a recovery:
+        tol = 1e-4 if dtype == jnp.float32 else 0.15
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(y, np.float32),
+                                   rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("rows,d", [(256, 512), (512, 1024), (128, 768)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(rows, d, dtype):
+    k1, k2 = jax.random.split(KEY)
+    x = _rand(k1, (rows, d), dtype)
+    g = _rand(k2, (d,), jnp.float32) * 0.1 + 1.0
+    got = ops.rmsnorm(x, g)
+    want = ref.rmsnorm_ref(x, g)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(mi=st.integers(1, 4), ki=st.integers(1, 4), ni=st.integers(1, 4))
+def test_property_matmul_multiple_of_blocks(mi, ki, ni):
+    m, k, n = 128 * mi, 128 * ki, 128 * ni
+    k1, k2 = jax.random.split(jax.random.PRNGKey(m + k + n))
+    x, w = _rand(k1, (m, k), jnp.float32), _rand(k2, (k, n), jnp.float32)
+    np.testing.assert_allclose(ops.matmul(x, w), ref.matmul_ref(x, w),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_matches_core_decode():
+    """The Pallas decode and the core library's r=1 decode agree."""
+    from repro.core import CodeSpec, decode_outputs
+    t = 8
+    y = _rand(KEY, (t, 128, 256), jnp.float32)
+    spec = CodeSpec(t, 1)
+    parity = y.sum(0)
+    valid = jnp.ones(t, bool).at[3].set(False)
+    got = ops.cdc_decode(jnp.where(valid[:, None, None], y, 0), parity, valid)
+    want = decode_outputs(y, parity[None], valid, spec)
+    np.testing.assert_allclose(got, np.asarray(want), rtol=1e-4, atol=1e-4)

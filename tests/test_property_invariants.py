@@ -1,0 +1,84 @@
+"""Hypothesis property tests on system-level invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_arch, smoke_config
+from repro.core import CodedDenseSpec, CodeSpec, coded_matmul, \
+    make_parity_weights
+from repro.models import TPCtx, build
+
+
+@settings(max_examples=8, deadline=None)
+@given(split=st.integers(1, 9))
+def test_prefill_decode_split_invariance(split):
+    """Invariant: for ANY split point, prefill(prompt[:k]) then decoding
+    prompt[k:] token-by-token yields the same final logits as teacher
+    forcing — the ring cache + position bookkeeping is consistent."""
+    cfg = smoke_config(get_arch("h2o-danube-1.8b"))  # SWA ring cache
+    m = build(cfg, TPCtx(moe_capacity=0))
+    params = m.init(jax.random.PRNGKey(0))
+    batch = m.dummy_batch(jax.random.PRNGKey(1), 2, 10)
+    full = m.forward(params, batch, remat="none")  # [B, 10, V]
+
+    state = m.init_decode(params, batch, 2, 32, jnp.float32)
+    lg, state = m.decode(params, state,
+                         batch["tokens"][:, :split])
+    outs = [lg[:, -1]]
+    for t in range(split, 10):
+        lg, state = m.decode(params, state, batch["tokens"][:, t:t + 1])
+        outs.append(lg[:, 0])
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(full[:, split - 1:]),
+                               rtol=3e-3, atol=3e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(t=st.sampled_from([2, 4, 8]), seed=st.integers(0, 100),
+       scale=st.floats(0.01, 10.0))
+def test_coded_matmul_linearity(t, seed, scale):
+    """Invariant: coding commutes with scaling and addition of inputs
+    (linearity is WHY offline encode works, paper §5.2)."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (3, 16))
+    w = jax.random.normal(kw, (16, t * t * 4))
+    spec = CodedDenseSpec(CodeSpec(t, 2))
+    w_cdc = make_parity_weights(w, spec)
+    valid = jnp.ones(t, bool).at[seed % t].set(False)
+    y1 = coded_matmul(x, w, w_cdc, spec, valid)
+    y2 = coded_matmul(scale * x, w, w_cdc, spec, valid)
+    np.testing.assert_allclose(np.asarray(y2), scale * np.asarray(y1),
+                               rtol=2e-3, atol=2e-3 * scale)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_checkpoint_roundtrip_random_pytrees(seed, tmp_path_factory):
+    """Invariant: save/restore is the identity on arbitrary pytrees."""
+    from repro.ckpt import restore, save
+    rng = np.random.default_rng(seed)
+    tree = {
+        "a": jnp.asarray(rng.standard_normal((rng.integers(1, 8),
+                                              rng.integers(1, 8)))),
+        "n": {"b": jnp.asarray(rng.integers(0, 100, size=5), jnp.int32),
+              "c": [jnp.asarray(rng.standard_normal(3), jnp.float32)
+                    for _ in range(rng.integers(1, 3))]},
+    }
+    d = str(tmp_path_factory.mktemp("ck") / f"s{seed}")
+    save(tree, d, seed)
+    out = restore(jax.tree.map(jnp.zeros_like, tree), d, seed)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        np.testing.assert_allclose(np.asarray(a, np.float64),
+                                   np.asarray(b, np.float64))
+
+
+@settings(max_examples=6, deadline=None)
+@given(p_fail=st.floats(0.0, 0.4), seed=st.integers(0, 50))
+def test_erasure_sampler_respects_budget(p_fail, seed):
+    """Invariant: the failure sampler never exceeds the decodable budget."""
+    from repro.core.failure import sample_erasures
+    rng = np.random.default_rng(seed)
+    for T, r in [(4, 1), (8, 2), (16, 4)]:
+        valid = sample_erasures(rng, T, p_fail, max_erasures=r)
+        assert (~valid).sum() <= r
