@@ -1,7 +1,15 @@
-"""Serving driver: batched generation with CDC fault injection.
+"""Serving driver: runtime-scheduled generation with CDC fault injection.
+
+Drives the coded cluster runtime (``repro.runtime``): requests are
+submitted to the continuous-batching scheduler and a shard erasure can be
+injected at a simulated time; within the code's budget the runtime
+recovers in-step, beyond it the CDC+2MR hybrid requeues and heals.
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b --smoke \\
-      --coded --fail-step 4 --fail-shard 2
+      --coded --fail-time-ms 4 --fail-shard 2
+
+``--legacy`` runs the old one-batch-at-a-time ServingEngine path with the
+original --fail-step semantics.
 """
 from __future__ import annotations
 
@@ -14,29 +22,12 @@ import numpy as np
 from repro.configs import get_arch, smoke_config
 from repro.core.failure import StragglerModel
 from repro.models import TPCtx, build
-from repro.serve import ServeConfig, ServingEngine
+from repro.runtime import (ContinuousBatchingScheduler, RuntimeConfig,
+                           ShardHealthController, erasure, run_arrivals)
+from repro.serve import ModelStepper, ServeConfig, ServingEngine
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="granite-3-8b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--coded", action="store_true")
-    ap.add_argument("--tp", type=int, default=4)
-    ap.add_argument("--batch", type=int, default=2)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen-tokens", type=int, default=16)
-    ap.add_argument("--fail-step", type=int, default=-1)
-    ap.add_argument("--fail-shard", type=int, default=1)
-    args = ap.parse_args()
-
-    cfg = get_arch(args.arch)
-    if args.smoke:
-        cfg = smoke_config(cfg)
-    ctx = TPCtx(tp=args.tp, mode="coded" if args.coded else "plain",
-                moe_capacity=0)
-    model = build(cfg, ctx)
-    params = model.init(jax.random.PRNGKey(0))
+def _legacy(args, model, params):
     eng = ServingEngine(model, params,
                         ServeConfig(max_len=args.prompt_len
                                     + args.gen_tokens + 8, batch=args.batch,
@@ -51,6 +42,58 @@ def main():
     if args.coded:
         print("straggler model (first-T-of-T+r):",
               eng.straggler_latency(StragglerModel(), n_trials=5000))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--coded", action="store_true")
+    ap.add_argument("--tp", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=2,
+                    help="runtime: decode slots; legacy: batch size")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--arrival-gap-ms", type=float, default=2.0)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-tokens", type=int, default=16)
+    ap.add_argument("--fail-time-ms", type=float, default=-1.0,
+                    help="inject a shard erasure at this simulated time")
+    ap.add_argument("--fail-shard", type=int, default=1)
+    ap.add_argument("--fail-step", type=int, default=-1,
+                    help="legacy mode: decode step to kill the shard at")
+    ap.add_argument("--legacy", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    ctx = TPCtx(tp=args.tp, mode="coded" if args.coded else "plain",
+                moe_capacity=0)
+    model = build(cfg, ctx)
+    params = model.init(jax.random.PRNGKey(0))
+    if args.legacy or args.fail_step >= 0:
+        return _legacy(args, model, params)
+
+    stepper = ModelStepper(model, params,
+                           max_len=args.prompt_len + args.gen_tokens + 8)
+    events = [erasure(args.fail_time_ms, args.fail_shard)] \
+        if args.fail_time_ms >= 0 else []
+    health = ShardHealthController(stepper.n_shards, stepper.erasure_budget,
+                                   events=events)
+    sched = ContinuousBatchingScheduler(
+        stepper, RuntimeConfig(n_slots=args.batch), health=health)
+    rng = np.random.default_rng(1)
+    arrivals = [(i * args.arrival_gap_ms,
+                 rng.integers(0, cfg.vocab, args.prompt_len),
+                 args.gen_tokens) for i in range(args.requests)]
+    completed = run_arrivals(sched, arrivals)
+    print(f"completed {len(completed)}/{args.requests} requests")
+    if completed:
+        print("tokens (first request):", completed[0].tokens)
+    print(sched.metrics.to_json())
+    if args.coded:
+        print("straggler model (first-T-of-T+r):",
+              stepper.straggler_latency(StragglerModel(), n_trials=5000))
 
 
 if __name__ == "__main__":

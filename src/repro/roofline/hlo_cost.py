@@ -123,15 +123,21 @@ def analyze_hlo(text: str) -> dict:
                         out_elems *= x
                 contracted = 1
                 cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
-                oper = re.search(r"\(%([\w\.\-]+)", rhs)
-                if cm and oper and oper.group(1) in shapes:
-                    lhs_dims = _dims(shapes[oper.group(1)])
-                    if lhs_dims:
-                        dd = lhs_dims[0][1]
-                        for i in (cm.group(1).split(",")
-                                  if cm.group(1) else []):
-                            if i and int(i) < len(dd):
-                                contracted *= dd[int(i)]
+                # lhs shape: typed inline operand ("dot(f32[a,b] %x, ...)",
+                # newer HLO printers) or looked up by name ("dot(%x, ...)")
+                lhs_dims = []
+                if "(" in rhs:
+                    lhs_dims = _dims(rhs[rhs.index("(") + 1:])[:1]
+                if not lhs_dims:
+                    oper = re.search(r"\(%([\w\.\-]+)", rhs)
+                    if oper and oper.group(1) in shapes:
+                        lhs_dims = _dims(shapes[oper.group(1)])[:1]
+                if cm and lhs_dims:
+                    dd = lhs_dims[0][1]
+                    for i in (cm.group(1).split(",")
+                              if cm.group(1) else []):
+                        if i and int(i) < len(dd):
+                            contracted *= dd[int(i)]
                 local[cname]["flops"] += 2.0 * out_elems * contracted
 
             if op == "while":

@@ -1,0 +1,25 @@
+"""Coded cluster runtime: continuous batching + shard health + telemetry.
+
+The runtime layer turns the paper's per-request fault-tolerance math
+(``repro.core``) and the model stepper (``repro.serve``) into a serving
+system under sustained load: a request queue feeding a fixed pool of
+decode slots, a health controller applying the CDC+2MR hybrid policy to
+live erasure events, and JSON-snapshot telemetry for the benchmarks.
+"""
+from repro.runtime.clock import Clock, SimClock, WallClock
+from repro.runtime.health import (EventKind, HealthAction, ShardEvent,
+                                  ShardHealthController, erasure, recovery,
+                                  replica_failure)
+from repro.runtime.metrics import RuntimeMetrics
+from repro.runtime.request import Request, RequestState
+from repro.runtime.scheduler import (ContinuousBatchingScheduler,
+                                     RuntimeConfig, run_arrivals)
+
+__all__ = [
+    "Clock", "SimClock", "WallClock",
+    "EventKind", "HealthAction", "ShardEvent", "ShardHealthController",
+    "erasure", "recovery", "replica_failure",
+    "RuntimeMetrics",
+    "Request", "RequestState",
+    "ContinuousBatchingScheduler", "RuntimeConfig", "run_arrivals",
+]

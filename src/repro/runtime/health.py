@@ -1,0 +1,132 @@
+"""Shard-health controller: live validity masks + the CDC+2MR hybrid.
+
+Consumes erasure/recovery events (``core.failure``'s erasure-channel view
+of hardware) and decides, per event, which half of the paper's §6.3 hybrid
+policy applies:
+
+  * within the code's erasure budget  -> flip the validity mask and keep
+    decoding; the coded GEMMs recover in-step (CDC path, close-to-zero
+    recovery, §5.2);
+  * beyond the budget (or a whole-replica failure) -> the 2MR fallback:
+    in-flight requests are requeued, the shard set is replaced by the
+    standby replica (heal-all), and parity weights are re-encoded offline;
+  * shard recovery -> heal the shard and re-encode parity so the restored
+    device rejoins the code.
+
+The budget comes from the code geometry (``CodedDenseSpec.
+max_device_failures``) and is only granted when the model's split method
+is CDC-suitable per ``core.policy`` Table 1 — input-split layers cannot be
+protected offline, so their runtime budget is zero regardless of r.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+import numpy as np
+
+from repro.core.policy import OUTPUT_SPLIT, SplitMethod
+
+
+class EventKind(enum.Enum):
+    ERASURE = "erasure"                  # one shard's output lost
+    RECOVERY = "recovery"                # a dead shard came back
+    REPLICA_FAILURE = "replica_failure"  # whole serving replica lost
+
+
+class HealthAction(enum.Enum):
+    CONTINUE = "continue"    # mask updated; coded math absorbs the loss
+    REQUEUE = "requeue"      # beyond budget: 2MR fallback, drain + heal
+    REENCODE = "reencode"    # healed: parity weights must be re-encoded
+    NOOP = "noop"            # duplicate report; state already reflects it
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class ShardEvent:
+    time_ms: float
+    kind: EventKind = dataclasses.field(compare=False)
+    shard: int = dataclasses.field(default=-1, compare=False)
+
+
+def erasure(time_ms: float, shard: int) -> ShardEvent:
+    return ShardEvent(time_ms, EventKind.ERASURE, shard)
+
+
+def recovery(time_ms: float, shard: int) -> ShardEvent:
+    return ShardEvent(time_ms, EventKind.RECOVERY, shard)
+
+
+def replica_failure(time_ms: float) -> ShardEvent:
+    return ShardEvent(time_ms, EventKind.REPLICA_FAILURE)
+
+
+class ShardHealthController:
+    def __init__(self, n_shards: int, budget: int,
+                 split: SplitMethod = OUTPUT_SPLIT,
+                 events: list[ShardEvent] | None = None):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self.n_shards = n_shards
+        # Table 1 gate: an unsuitable split cannot carry offline parity, so
+        # every failure is beyond-budget no matter how many parity shards
+        # were provisioned.
+        self.budget = budget if split.suitable_for_cdc else 0
+        self.valid = np.ones(n_shards, bool)
+        self._pending: list[ShardEvent] = sorted(events or [])
+        self.log: list[tuple[ShardEvent, HealthAction]] = []
+
+    # ----------------------------------------------------------- events ----
+    def schedule(self, event: ShardEvent):
+        self._pending.append(event)
+        self._pending.sort()
+
+    def poll(self, now_ms: float) -> list[HealthAction]:
+        """Apply every pending event due at or before ``now_ms``."""
+        actions = []
+        while self._pending and self._pending[0].time_ms <= now_ms:
+            actions.append(self.apply(self._pending.pop(0)))
+        return actions
+
+    def apply(self, ev: ShardEvent) -> HealthAction:
+        if ev.kind is EventKind.ERASURE:
+            if not (0 <= ev.shard < self.n_shards):
+                raise ValueError(f"shard {ev.shard} out of range")
+            if not self.valid[ev.shard]:
+                # duplicate report of an already-dead shard: one physical
+                # failure must count (and be recovered) exactly once
+                action = HealthAction.NOOP
+            else:
+                self.valid[ev.shard] = False
+                n_dead = int((~self.valid).sum())
+                action = (HealthAction.CONTINUE if n_dead <= self.budget
+                          else HealthAction.REQUEUE)
+        elif ev.kind is EventKind.RECOVERY:
+            if self.valid[ev.shard]:
+                action = HealthAction.NOOP
+            else:
+                self.valid[ev.shard] = True
+                action = HealthAction.REENCODE
+        elif ev.kind is EventKind.REPLICA_FAILURE:
+            action = HealthAction.REQUEUE
+        else:  # pragma: no cover
+            raise ValueError(ev.kind)
+        self.log.append((ev, action))
+        return action
+
+    # ---------------------------------------------------------- healing ----
+    def replace_replica(self) -> int:
+        """2MR path: swap in the standby, all shards healthy again.
+
+        Returns the number of shards that were dead before the swap.
+        """
+        n_dead = int((~self.valid).sum())
+        self.valid[:] = True
+        return n_dead
+
+    @property
+    def mask(self) -> np.ndarray:
+        return self.valid.copy()
+
+    @property
+    def n_dead(self) -> int:
+        return int((~self.valid).sum())

@@ -1,0 +1,95 @@
+"""Runtime telemetry: counters, latency histograms, queue-depth series.
+
+Everything the benchmarks report comes through here, snapshotted as plain
+JSON-serialisable dicts so ``benchmarks/serve_throughput.py`` (and any
+external collector) can diff coded vs uncoded runs without touching
+runtime internals.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+_COUNTERS = (
+    "requests_submitted",
+    "requests_admitted",
+    "requests_completed",
+    "requests_requeued",
+    "decode_rounds",
+    "tokens_generated",
+    "erasures_recovered",
+    "beyond_budget_failures",
+    "shards_healed",
+    "parity_reencodes",
+)
+
+
+class RuntimeMetrics:
+    def __init__(self):
+        self.counters: dict[str, int] = {k: 0 for k in _COUNTERS}
+        self.latencies_ms: list[float] = []
+        self.queueing_ms: list[float] = []
+        self.queue_depth: list[tuple[float, int]] = []   # (t_ms, depth)
+        self.start_ms: float | None = None
+        self.end_ms: float | None = None
+
+    # ------------------------------------------------------------ write ----
+    def count(self, name: str, n: int = 1):
+        self.counters[name] = self.counters.get(name, 0) + n
+
+    def observe_request(self, latency_ms: float, queueing_ms: float):
+        self.latencies_ms.append(float(latency_ms))
+        self.queueing_ms.append(float(queueing_ms))
+
+    def sample_queue_depth(self, t_ms: float, depth: int):
+        self.queue_depth.append((float(t_ms), int(depth)))
+
+    def mark(self, t_ms: float):
+        if self.start_ms is None:
+            self.start_ms = float(t_ms)
+        self.end_ms = float(t_ms)
+
+    # ------------------------------------------------------------- read ----
+    @property
+    def elapsed_ms(self) -> float:
+        if self.start_ms is None or self.end_ms is None:
+            return 0.0
+        return self.end_ms - self.start_ms
+
+    def _dist(self, xs: list[float]) -> dict:
+        if not xs:
+            return {"n": 0}
+        a = np.asarray(xs, np.float64)
+        return {
+            "n": int(a.size),
+            "mean_ms": float(a.mean()),
+            "p50_ms": float(np.percentile(a, 50)),
+            "p99_ms": float(np.percentile(a, 99)),
+            "max_ms": float(a.max()),
+        }
+
+    def snapshot(self) -> dict:
+        elapsed_s = self.elapsed_ms / 1e3
+        depths = [d for _, d in self.queue_depth]
+        return {
+            "counters": dict(self.counters),
+            "elapsed_ms": self.elapsed_ms,
+            "throughput": {
+                "tokens_per_s": (self.counters["tokens_generated"] / elapsed_s
+                                 if elapsed_s > 0 else None),
+                "requests_per_s": (
+                    self.counters["requests_completed"] / elapsed_s
+                    if elapsed_s > 0 else None),
+            },
+            "request_latency": self._dist(self.latencies_ms),
+            "queueing_delay": self._dist(self.queueing_ms),
+            "queue_depth": {
+                "samples": len(depths),
+                "mean": float(np.mean(depths)) if depths else 0.0,
+                "max": int(max(depths)) if depths else 0,
+            },
+        }
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.snapshot(), indent=indent, sort_keys=True)

@@ -1,0 +1,264 @@
+"""Continuous-batching scheduler over a fixed pool of decode slots.
+
+The paper's serving claims are single-request statements ("never loses a
+request", close-to-zero recovery). This scheduler turns them into
+steady-state properties of a request STREAM:
+
+  * a FIFO admission queue feeds ``n_slots`` decode slots; a slot (its
+    [1, max_len] KV-cache allocation) is reused by the next queued request
+    the moment its occupant finishes — continuous batching, no
+    wait-for-the-whole-batch barrier;
+  * every decode round consults the ``ShardHealthController``: within the
+    erasure budget the round proceeds with the flipped validity mask and
+    the coded GEMMs reconstruct the lost shard in-step (CDC half of the
+    §6.3 hybrid); beyond budget, in-flight requests are requeued, the
+    standby replica is swapped in, and parity is re-encoded offline (2MR
+    half) — the request stream drains either way, so no request is lost;
+  * time comes from an injected clock. Tests use a deterministic
+    ``SimClock`` advanced by a fixed per-round latency; benchmarks sample
+    round latency from the paper's first-T-of-(T+r) straggler model.
+
+Decode slots hold independent batch-1 states over ONE jitted step
+function, so admission and completion never force a recompile and a
+mid-stream erasure needs no re-dispatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any
+
+import numpy as np
+
+from repro.core.failure import StragglerModel, request_latency
+from repro.runtime.clock import Clock, SimClock
+from repro.runtime.health import HealthAction, ShardHealthController
+from repro.runtime.metrics import RuntimeMetrics
+from repro.runtime.request import Request, RequestState
+from repro.serve.engine import ModelStepper
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    n_slots: int = 4
+    step_time_ms: float = 1.0        # fixed per-round latency (SimClock)
+    straggler: StragglerModel | None = None  # sample round latency instead
+    seed: int = 0
+    max_requeues: int = 8            # liveness guard for event storms
+    max_rounds: int = 100_000
+
+    def __post_init__(self):
+        if self.n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {self.n_slots}")
+        if self.step_time_ms < 0:
+            raise ValueError("step_time_ms must be >= 0")
+        if self.max_requeues < 0 or self.max_rounds < 1:
+            raise ValueError("max_requeues/max_rounds out of range")
+
+
+@dataclasses.dataclass
+class _Slot:
+    idx: int
+    request: Request | None = None
+    state: Any = None                # the slot's decode/KV state (batch=1)
+    last_tok: Any = None
+    occupancies: int = 0
+
+    @property
+    def free(self) -> bool:
+        return self.request is None
+
+
+class ContinuousBatchingScheduler:
+    def __init__(self, stepper: ModelStepper, rcfg: RuntimeConfig,
+                 clock: Clock | None = None,
+                 health: ShardHealthController | None = None,
+                 metrics: RuntimeMetrics | None = None):
+        self.stepper = stepper
+        self.rcfg = rcfg
+        self.clock = clock if clock is not None else SimClock()
+        self.health = health if health is not None else ShardHealthController(
+            stepper.n_shards, stepper.erasure_budget)
+        self.metrics = metrics if metrics is not None else RuntimeMetrics()
+        self.queue: deque[Request] = deque()
+        self.slots = [_Slot(i) for i in range(rcfg.n_slots)]
+        self.completed: list[Request] = []
+        self._rng = np.random.default_rng(rcfg.seed)
+        self._next_rid = 0
+
+    # --------------------------------------------------------- ingestion ----
+    def submit(self, prompt, max_new_tokens: int,
+               arrival_ms: float | None = None) -> Request:
+        """Enqueue a request. ``arrival_ms`` lets timed workloads record
+        the TRUE arrival instant even when submission happens at the next
+        round boundary (latency then includes the sub-round wait); it must
+        not lie in the future."""
+        now = self.clock.now()
+        arrival = now if arrival_ms is None else min(float(arrival_ms), now)
+        req = Request(self._next_rid, np.asarray(prompt, np.int32),
+                      int(max_new_tokens), arrival_ms=arrival)
+        self._next_rid += 1
+        self.queue.append(req)
+        self.metrics.count("requests_submitted")
+        self.metrics.sample_queue_depth(self.clock.now(), len(self.queue))
+        return req
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or any(not s.free for s in self.slots)
+
+    @property
+    def n_running(self) -> int:
+        return sum(not s.free for s in self.slots)
+
+    # ------------------------------------------------------------ health ----
+    def _handle_health(self):
+        for action in self.health.poll(self.clock.now()):
+            if action is HealthAction.CONTINUE:
+                # CDC path: mask flipped, decode recovers in-step.
+                self.metrics.count("erasures_recovered")
+            elif action is HealthAction.REQUEUE:
+                self._requeue_inflight()
+            elif action is HealthAction.REENCODE:
+                # a shard rejoined: fold it back into the code.
+                self.metrics.count("shards_healed")
+                self.stepper.reencode()
+                self.metrics.count("parity_reencodes")
+            # HealthAction.NOOP: duplicate report, nothing to do
+
+    def _requeue_inflight(self):
+        """2MR fallback: drain slots, swap the standby replica in, re-encode
+        parity. Requests keep their original arrival order."""
+        self.metrics.count("beyond_budget_failures")
+        victims = []
+        for slot in self.slots:
+            if slot.free:
+                continue
+            req = slot.request
+            if req.n_requeues >= self.rcfg.max_requeues:
+                raise RuntimeError(
+                    f"request {req.rid} exceeded max_requeues="
+                    f"{self.rcfg.max_requeues}; the event schedule never "
+                    "leaves a healthy window to finish in")
+            req.reset_for_requeue()
+            victims.append(req)
+            slot.request, slot.state, slot.last_tok = None, None, None
+        for req in sorted(victims, key=lambda r: (r.arrival_ms, r.rid),
+                          reverse=True):
+            self.queue.appendleft(req)
+        self.metrics.count("requests_requeued", len(victims))
+        healed = self.health.replace_replica()
+        self.metrics.count("shards_healed", healed)
+        self.stepper.reencode()
+        self.metrics.count("parity_reencodes")
+
+    # --------------------------------------------------------- admission ----
+    def _admit(self):
+        for slot in self.slots:
+            if not slot.free or not self.queue:
+                continue
+            req = self.queue.popleft()
+            now = self.clock.now()
+            req.state = RequestState.RUNNING
+            req.slot = slot.idx
+            req.admitted_ms = now
+            batch = {"tokens": req.prompt[None, :]}
+            logits, state = self.stepper.prefill(batch, self.health.mask)
+            tok = self.stepper.greedy(logits)
+            slot.request, slot.state, slot.last_tok = req, state, tok
+            slot.occupancies += 1
+            req.tokens.append(int(np.asarray(tok)[0, 0]))
+            self.metrics.count("requests_admitted")
+            self.metrics.count("tokens_generated")
+            if req.done:
+                self._complete(slot)
+
+    def _complete(self, slot: _Slot):
+        req = slot.request
+        req.state = RequestState.COMPLETED
+        req.finished_ms = self.clock.now()
+        self.completed.append(req)
+        self.metrics.count("requests_completed")
+        self.metrics.observe_request(req.latency_ms, req.queueing_ms)
+        # the slot (and its KV allocation) is immediately reusable
+        slot.request, slot.state, slot.last_tok = None, None, None
+
+    # -------------------------------------------------------------- step ----
+    def step(self) -> list[Request]:
+        """One decode round: apply due health events, admit into free slots,
+        decode one token per occupied slot, advance the clock."""
+        self.metrics.mark(self.clock.now())
+        self._handle_health()
+        self._admit()
+
+        finished: list[Request] = []
+        mask = self.health.mask
+        for slot in self.slots:
+            if slot.free or slot.request.done:
+                continue
+            logits, slot.state = self.stepper.decode_one(
+                slot.state, slot.last_tok, mask)
+            slot.last_tok = self.stepper.greedy(logits)
+            slot.request.tokens.append(int(np.asarray(slot.last_tok)[0, 0]))
+            self.metrics.count("tokens_generated")
+            if slot.request.done:
+                finished.append(slot.request)
+                self._complete(slot)
+
+        self.metrics.count("decode_rounds")
+        self._advance_clock()
+        self.metrics.sample_queue_depth(self.clock.now(), len(self.queue))
+        self.metrics.mark(self.clock.now())
+        return finished
+
+    def _advance_clock(self):
+        if not isinstance(self.clock, SimClock):
+            return
+        if self.rcfg.straggler is not None:
+            T, r = self.stepper.n_shards, 0
+            if self.stepper.coded:
+                r = int(self.stepper.model.ctx.code_r)
+            times = self.rcfg.straggler.sample(self._rng, (T + r,))
+            # coded rounds finish at the T-th of T+r arrivals; uncoded
+            # rounds wait for all T shards (paper §6.2)
+            dt = float(request_latency(times, T)) if r \
+                else float(times[:T].max())
+        else:
+            dt = self.rcfg.step_time_ms
+        self.clock.advance(dt)
+
+    # --------------------------------------------------------------- run ----
+    def run(self) -> list[Request]:
+        """Drain queue + slots. Returns all requests completed so far."""
+        rounds = 0
+        while self.busy:
+            self.step()
+            rounds += 1
+            if rounds > self.rcfg.max_rounds:
+                raise RuntimeError(
+                    f"scheduler did not drain in {self.rcfg.max_rounds} "
+                    "rounds")
+        return self.completed
+
+
+def run_arrivals(sched: ContinuousBatchingScheduler,
+                 arrivals: list[tuple[float, Any, int]]) -> list[Request]:
+    """Drive a timed workload: ``arrivals`` is [(time_ms, prompt,
+    max_new_tokens)]. Requests are submitted when the (simulated) clock
+    reaches their arrival time; idle gaps fast-forward the clock."""
+    pending = deque(sorted(arrivals, key=lambda a: a[0]))
+    rounds = 0
+    while pending or sched.busy:
+        if pending and not sched.busy and \
+                pending[0][0] > sched.clock.now() and \
+                isinstance(sched.clock, SimClock):
+            sched.clock.advance_to(pending[0][0])
+        while pending and pending[0][0] <= sched.clock.now():
+            t, prompt, n = pending.popleft()
+            sched.submit(prompt, n, arrival_ms=t)
+        sched.step()
+        rounds += 1
+        if rounds > sched.rcfg.max_rounds:
+            raise RuntimeError(
+                f"workload did not drain in {sched.rcfg.max_rounds} rounds")
+    return sched.completed

@@ -1,1 +1,2 @@
-from repro.serve.engine import ServeConfig, ServingEngine
+from repro.serve.engine import ModelStepper, ServeConfig, ServingEngine
+

@@ -1,24 +1,28 @@
-"""Serving engine: batched prefill/decode with CDC-coded fault tolerance.
+"""Serving stepper: the model-facing half of the coded serving stack.
 
-This is where the paper's operational claims live at datacenter scale:
+This module used to be a monolithic synchronous engine; the scheduling,
+failure-policy, and telemetry concerns now live in ``repro.runtime``. What
+remains here is the *stepper* — the minimal stateful object the runtime
+drives:
 
-  * coded inference: every column-parallel GEMM carries parity shards; the
-    engine feeds the CURRENT validity mask into each step, so a shard loss
-    mid-request is recovered inside the same XLA program (close-to-zero
-    recovery: no re-dispatch, no weight reload, no recompute — paper §5.2).
-  * request continuity: "our solution never loses a request" — erasures
-    flip the mask, the step still returns correct tokens; the engine also
-    re-queues requests on whole-replica failures (the CDC+2MR hybrid, §6.3).
-  * straggler mitigation (§6.2): with r parity shards the combiner
-    semantically needs any T of T+r shard messages. A synchronous TPU mesh
-    can't skip laggards inside a step, so the engine exposes the paper's
-    first-T-of-(T+r) latency model for the pod/DCN boundary, simulated with
-    the measured per-shard latency distribution (core.failure).
+  * ``ModelStepper``: owns the CDC-encoded params and the jitted decode
+    step; exposes prefill / decode-one-token / re-encode. It never looks
+    at clocks, queues, or failure policy — the runtime feeds it the
+    CURRENT validity mask each call, so a shard loss mid-request is
+    recovered inside the same XLA program (close-to-zero recovery: no
+    re-dispatch, no weight reload, no recompute — paper §5.2).
+  * ``ServingEngine``: the legacy one-batch-at-a-time facade, kept for
+    direct scripted use and the original integration tests; it is now a
+    thin wrapper over ``ModelStepper``.
+
+Straggler mitigation (§6.2) stays here as a latency *model*: a synchronous
+TPU mesh can't skip laggards inside a step, so the stepper exposes the
+paper's first-T-of-(T+r) order-statistic distribution for the pod/DCN
+boundary, simulated with the measured per-shard latencies (core.failure).
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any
 
 import jax
@@ -37,17 +41,103 @@ class ServeConfig:
     greedy: bool = True
 
 
+class ModelStepper:
+    """Thin model stepper the runtime drives.
+
+    Holds encoded params + one jitted decode function; all slot states are
+    caller-owned pytrees, so the runtime can keep any number of independent
+    decode slots (continuous batching) over a single compiled step.
+    """
+
+    def __init__(self, model: Model, params, max_len: int,
+                 cache_dtype: Any = jnp.float32):
+        self.model = model
+        self.max_len = int(max_len)
+        self.cache_dtype = cache_dtype
+        self._raw_params = params
+        self.params = model.encode_offline(params)
+        self.coded = bool(model.ctx.coded)
+        self.n_shards = max(int(model.ctx.tp), 1)
+        spec = model.ctx.spec
+        self.erasure_budget = int(spec.max_device_failures) if spec else 0
+        self._decode = jax.jit(
+            lambda p, st, tok, valid: model.decode(p, st, tok, valid))
+
+    # ------------------------------------------------------------ coding ----
+    def reencode(self):
+        """Offline parity re-encode (paper §5.1): run after a healed shard
+        rejoins or a standby replica is swapped in."""
+        self.params = self.model.encode_offline(self._raw_params)
+
+    def full_mask(self) -> np.ndarray:
+        return np.ones(self.n_shards, bool)
+
+    def _mask(self, valid) -> jax.Array | None:
+        if valid is None:
+            return None
+        return jnp.asarray(np.asarray(valid, bool))
+
+    # ---------------------------------------------------------- stepping ----
+    def prefill(self, batch: dict, valid=None) -> tuple[jax.Array, Any]:
+        """Run the prompt through the decode path, filling a fresh slot
+        state. Returns (last-position logits [b, 1, V], state)."""
+        v = self._mask(valid) if self.coded else None
+        b = batch["tokens"].shape[0]
+        state = self.model.init_decode(self.params, batch, b, self.max_len,
+                                       self.cache_dtype, valid=v)
+        logits, state = self._decode(self.params, state, batch["tokens"], v)
+        return logits[:, -1:], state
+
+    def decode_one(self, state, tok: jax.Array, valid=None
+                   ) -> tuple[jax.Array, Any]:
+        """One decode step: tok [b, 1] -> (logits [b, 1, V], new state)."""
+        v = self._mask(valid) if self.coded else None
+        return self._decode(self.params, state, tok, v)
+
+    @staticmethod
+    def greedy(logits: jax.Array) -> jax.Array:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    # ------------------------------------------------- straggler model ----
+    def straggler_latency(self, straggler: StragglerModel,
+                          n_trials: int = 10000, seed: int = 0) -> dict:
+        """First-T-of-(T+r) request-latency distribution across the coded
+        shard set (paper Fig. 14/15): pod-level dispatch only needs T of
+        T+r shard responses."""
+        T = self.n_shards
+        r = int(self.model.ctx.code_r if self.coded else 0)
+        rng = np.random.default_rng(seed)
+        times = straggler.sample(rng, (n_trials, T + r))
+        coded = request_latency(times, T)
+        uncoded = request_latency(times[:, :T], T)
+        return {
+            "mean_coded_ms": float(coded.mean()),
+            "mean_uncoded_ms": float(uncoded.mean()),
+            "p99_coded_ms": float(np.percentile(coded, 99)),
+            "p99_uncoded_ms": float(np.percentile(uncoded, 99)),
+        }
+
+
 class ServingEngine:
+    """Legacy synchronous facade over ``ModelStepper``.
+
+    One batch at a time, caller-managed failure injection. New code should
+    use ``repro.runtime.ContinuousBatchingScheduler``, which drives the
+    same stepper under sustained load with a shard-health controller.
+    """
+
     def __init__(self, model: Model, params, scfg: ServeConfig):
         self.model = model
         self.scfg = scfg
-        self.params = model.encode_offline(params)
-        T = model.ctx.tp
-        self.valid = jnp.ones(max(T, 1), bool)
-        self._decode = jax.jit(
-            lambda p, st, tok, valid: model.decode(p, st, tok, valid))
+        self.stepper = ModelStepper(model, params, scfg.max_len,
+                                    scfg.cache_dtype)
+        self.valid = jnp.ones(self.stepper.n_shards, bool)
         self.metrics = {"requests": 0, "erasures_recovered": 0,
                         "requeued": 0}
+
+    @property
+    def params(self):
+        return self.stepper.params
 
     # -------------------------------------------------------- failures ----
     def inject_failure(self, shard: int):
@@ -60,17 +150,11 @@ class ServingEngine:
             self.valid = jnp.ones_like(self.valid)
         else:
             self.valid = self.valid.at[shard].set(True)
+        self.stepper.reencode()
 
     # ---------------------------------------------------------- serving ----
     def prefill(self, batch: dict) -> Any:
-        state = self.model.init_decode(self.params, batch,
-                                       batch["tokens"].shape[0],
-                                       self.scfg.max_len,
-                                       self.scfg.cache_dtype,
-                                       valid=self.valid)
-        # run the prompt through decode in one chunk (teacher-forced fill)
-        logits, state = self.model.decode(self.params, state,
-                                          batch["tokens"], self.valid)
+        logits, state = self.stepper.prefill(batch, self.valid)
         return logits, state
 
     def generate(self, batch: dict, n_tokens: int,
@@ -78,13 +162,13 @@ class ServingEngine:
         """Greedy generation; ``fail_at`` maps step -> shard to kill mid-
         request (the paper's Case Study II: performance unchanged)."""
         logits, state = self.prefill(batch)
-        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        tok = self.stepper.greedy(logits)
         out = [tok]
         for t in range(n_tokens - 1):
             if fail_at and t in fail_at:
                 self.inject_failure(fail_at[t])
-            logits, state = self._decode(self.params, state, tok, self.valid)
-            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            logits, state = self.stepper.decode_one(state, tok, self.valid)
+            tok = self.stepper.greedy(logits)
             out.append(tok)
         self.metrics["requests"] += batch["tokens"].shape[0]
         return np.concatenate([np.asarray(t) for t in out], axis=1)
@@ -92,18 +176,4 @@ class ServingEngine:
     # ------------------------------------------------- straggler model ----
     def straggler_latency(self, straggler: StragglerModel,
                           n_trials: int = 10000, seed: int = 0) -> dict:
-        """First-T-of-(T+r) request-latency distribution across the coded
-        shard set (paper Fig. 14/15): the engine's pod-level dispatch only
-        needs T of T+r shard responses."""
-        T = int(self.model.ctx.tp)
-        r = int(self.model.ctx.code_r if self.model.ctx.coded else 0)
-        rng = np.random.default_rng(seed)
-        times = straggler.sample(rng, (n_trials, T + r))
-        coded = request_latency(times, T)
-        uncoded = request_latency(times[:, :T], T)
-        return {
-            "mean_coded_ms": float(coded.mean()),
-            "mean_uncoded_ms": float(uncoded.mean()),
-            "p99_coded_ms": float(np.percentile(coded, 99)),
-            "p99_uncoded_ms": float(np.percentile(uncoded, 99)),
-        }
+        return self.stepper.straggler_latency(straggler, n_trials, seed)

@@ -20,7 +20,6 @@ import numpy as np
 
 from repro.ckpt import AsyncCheckpointer, latest_step, restore
 from repro.data import DataConfig, make_stream
-from repro.dist.sharding import batch_spec, param_shardings
 from repro.models.zoo import Model
 from repro.optim import AdamWConfig, init_state
 from repro.train.train_step import TrainConfig, make_train_step
@@ -67,6 +66,8 @@ class Trainer:
         opt_state = init_state(params)
         if self.mesh is not None:
             from jax.sharding import NamedSharding, PartitionSpec
+
+            from repro.dist.sharding import param_shardings
             ps = param_shardings(params, self.mesh)
             params = jax.device_put(params, ps)
             opt_state = jax.device_put(opt_state, {

@@ -1,0 +1,99 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+Implements just the API surface this suite uses (``given``, ``settings``,
+``strategies.integers/floats/sampled_from/permutations/data``). Each
+``@given`` test runs a fixed number of seeded-random examples instead of
+hypothesis' adaptive search, so the suite collects and exercises the same
+properties everywhere — minus shrinking and example databases. Install
+``hypothesis`` (see requirements-dev.txt) to get the real thing.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+
+N_EXAMPLES = 12
+
+
+class Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> Strategy:
+        return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> Strategy:
+        return Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(values) -> Strategy:
+        vals = list(values)
+        return Strategy(lambda rng: rng.choice(vals))
+
+    @staticmethod
+    def permutations(values) -> Strategy:
+        vals = list(values)
+
+        def draw(rng):
+            out = list(vals)
+            rng.shuffle(out)
+            return out
+
+        return Strategy(draw)
+
+    @staticmethod
+    def data() -> Strategy:
+        return Strategy(_DataObject)
+
+
+class _DataObject:
+    """Shares the example's rng so in-test draws stay deterministic."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: Strategy):
+        return strategy.example(self._rng)
+
+
+def given(**strategy_kwargs):
+    def deco(fn):
+        # Params not drawn from strategies are pytest fixtures: keep them
+        # in the runner's signature so pytest injects them (hypothesis
+        # supports the same mixing).
+        fixture_params = [
+            p for name, p in inspect.signature(fn).parameters.items()
+            if name not in strategy_kwargs]
+
+        def runner(*args, **fixtures):
+            fixtures.update({p.name: a
+                             for p, a in zip(fixture_params, args)})
+            for i in range(N_EXAMPLES):
+                rng = random.Random(0xC0DED + i)
+                drawn = {k: s.example(rng)
+                         for k, s in strategy_kwargs.items()}
+                fn(**fixtures, **drawn)
+
+        # NOT functools.wraps: copying __wrapped__ would make pytest
+        # introspect fn's full signature and demand fixtures for every
+        # strategy kwarg too.
+        runner.__signature__ = inspect.Signature(fixture_params)
+        for attr in ("__name__", "__qualname__", "__doc__", "__module__"):
+            setattr(runner, attr, getattr(fn, attr))
+        return runner
+
+    return deco
+
+
+def settings(*_args, **_kwargs):
+    def deco(fn):
+        return fn
+
+    return deco

@@ -12,6 +12,11 @@ import textwrap
 
 import pytest
 
+# the repro.dist layer is not built yet (see ROADMAP "Open items");
+# these tests activate as soon as it lands.
+pytest.importorskip("repro.dist.sharding",
+                    reason="repro.dist not implemented yet (ROADMAP)")
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
