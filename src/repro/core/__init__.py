@@ -11,8 +11,9 @@ from repro.core.coding import (CodeSpec, decode_outputs, encode_outputs,
                                encode_weights, generator_matrix,
                                max_decode_condition)
 from repro.core.coded_layer import (CodedDenseSpec, coded_matmul,
-                                    decode_folded, fold_parity_slots,
-                                    folded_slot_map, make_parity_weights,
+                                    decode_and_merge, decode_folded,
+                                    fold_parity_slots, folded_slot_map,
+                                    make_parity_weights, merge_shards,
                                     pad_for_code, unfold_parity)
 from repro.core.conv import coded_conv2d, conv2d_gemm, im2col
 from repro.core.failure import (StragglerModel, coverage_2mr,

@@ -44,6 +44,8 @@ __all__ = [
     "folded_slot_map",
     "coded_matmul",
     "decode_folded",
+    "decode_and_merge",
+    "merge_shards",
     "CodedDenseSpec",
 ]
 
@@ -159,6 +161,55 @@ def _shardwise_matmul(x: jax.Array, w_stacked: jax.Array,
                       preferred_element_type=dtype or x.dtype)
 
 
+def merge_shards(ys: jax.Array) -> jax.Array:
+    """[T, ..., m_l] stacked shard outputs -> merged [..., T*m_l]."""
+    y = jnp.moveaxis(ys, 0, -2)
+    return y.reshape(y.shape[:-2] + (y.shape[-2] * y.shape[-1],))
+
+
+def decode_and_merge(
+    ys: jax.Array,
+    parity: jax.Array | None,
+    spec: CodedDenseSpec,
+    valid: jax.Array | None,
+    *,
+    valid_parity: jax.Array | None = None,
+    acc_dtype=jnp.float32,
+) -> jax.Array:
+    """Recovery + merge given already-computed shard outputs.
+
+    The tail of ``coded_matmul`` — shared with ``dist.collectives``, where
+    ``ys``/``parity`` arrive from an all_gather over the `model` axis
+    instead of a local stacked einsum. Erased entries of ``ys`` (and, for
+    the folded layout, dead slots of ``parity``) may hold garbage; they
+    are masked here before the decode. Dedicated-layout parity rows are
+    assumed INTACT: ``coding.decode_outputs`` solves with all r equations
+    and has no equation-selection for a lost parity message (the folded
+    path does, via ``valid_parity``) — dedicated callers must deliver
+    parity from healthy workers (coded_matmul recomputes it locally).
+
+    ys:     [T, ..., m_l] data-shard outputs.
+    parity: [r, ..., m_l] (dedicated) or [T, ..., r*w] slots (folded);
+            None => plain merge.
+    """
+    code = spec.code
+    T = code.n_shards
+    if parity is None or code.n_parity == 0 or valid is None:
+        return merge_shards(ys)
+    if valid_parity is None:
+        valid_parity = valid
+    vshape = (T,) + (1,) * (ys.ndim - 1)
+    ys = jnp.where(valid.reshape(vshape), ys, 0)
+    if spec.layout == "dedicated":
+        rec = coding.decode_outputs(ys, parity, valid, code)
+    else:
+        pshape = (T,) + (1,) * (parity.ndim - 1)
+        p_slots = jnp.where(valid_parity.reshape(pshape), parity, 0)
+        rec = decode_folded(ys, p_slots, valid, code,
+                            valid_parity=valid_parity, acc_dtype=acc_dtype)
+    return merge_shards(rec)
+
+
 def coded_matmul(
     x: jax.Array,
     w: jax.Array,
@@ -196,27 +247,11 @@ def coded_matmul(
     ys = _shardwise_matmul(x, w_st)  # [T, ..., m_l]
 
     if w_cdc is None or code.n_parity == 0 or valid is None:
-        # uncoded (or nothing to recover): plain merge
-        y = jnp.moveaxis(ys, 0, -2)
-        return y.reshape(y.shape[:-2] + (m,))
+        return merge_shards(ys)  # uncoded (or nothing to recover)
 
-    if valid_parity is None:
-        valid_parity = valid
-    vshape = (T,) + (1,) * (ys.ndim - 1)
-    ys = jnp.where(valid.reshape(vshape), ys, 0)  # erase dead contributions
-
-    if spec.layout == "dedicated":
-        parity = _shardwise_matmul(x, w_cdc)  # [r, ..., m_l]
-        rec = coding.decode_outputs(ys, parity, valid, code)
-    else:
-        p_slots = _shardwise_matmul(x, w_cdc)  # [T, ..., r*w]
-        pshape = (T,) + (1,) * (p_slots.ndim - 1)
-        p_slots = jnp.where(valid_parity.reshape(pshape), p_slots, 0)
-        rec = decode_folded(ys, p_slots, valid, code,
+    parity = _shardwise_matmul(x, w_cdc)  # dedicated [r,...,m_l] | slots
+    return decode_and_merge(ys, parity, spec, valid,
                             valid_parity=valid_parity, acc_dtype=acc_dtype)
-
-    y = jnp.moveaxis(rec, 0, -2)
-    return y.reshape(y.shape[:-2] + (m,))
 
 
 def decode_folded(ys: jax.Array, p_slots: jax.Array, valid: jax.Array,

@@ -1,0 +1,31 @@
+"""Version-tolerant shard_map.
+
+jax moved ``shard_map`` from ``jax.experimental.shard_map`` to the top-level
+namespace (and renamed ``check_rep`` -> ``check_vma``) across 0.4.x/0.5.x.
+This repo's distributed paths always want the unchecked variant (they use
+``axis_index`` / ``ppermute`` freely), so expose one ``shard_map(f, mesh,
+in_specs, out_specs)`` that resolves whichever API the installed jax has.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+
+def _resolve():
+    fn = getattr(jax, "shard_map", None)
+    if fn is None:
+        from jax.experimental.shard_map import shard_map as fn
+    return fn
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    fn = _resolve()
+    for kw in ("check_vma", "check_rep"):
+        try:
+            return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{kw: False})
+        except TypeError:
+            continue
+    return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)

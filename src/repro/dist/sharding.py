@@ -1,0 +1,164 @@
+"""GSPMD layout rules: map every model-zoo param/state pytree onto a mesh.
+
+Mesh axes (DESIGN.md §4):
+  ``model``  the tensor-parallel axis. Its size IS the code's T: coded GEMM
+             output shard i (columns [i*m_l, (i+1)*m_l) of ``w``) and folded
+             parity slot i both live on model-rank i, so a CDC shard maps to
+             a real device placement and ``valid[i]`` names physical rank i.
+  ``data``   batch/FSDP axis (weights sharded over it when ``fsdp="data"``).
+  ``pod``    optional outer axis: extra batch parallelism for train/serve,
+             and the stage axis for ``dist.pipeline``.
+
+Everything here is pure layout metadata — functions take pytrees of arrays
+or ShapeDtypeStructs and return matching pytrees of ``PartitionSpec`` /
+``NamedSharding``. A dimension is only sharded when the axis exists in the
+mesh AND divides it evenly; otherwise that dim falls back to replicated, so
+the specs are total over every (arch x mesh) cell including ragged smoke
+shapes.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+__all__ = ["param_specs", "param_shardings", "state_specs", "batch_spec",
+           "batch_axes"]
+
+# parent-dict names of row-parallel (input-split) GEMMs: first dim over
+# `model` (megatron row layout; never coded — paper Table 1)
+_ROW_PARALLEL = frozenset({"wo", "w2", "down", "out_proj"})
+# stacked-layer containers (leaves carry a leading scan/vmap L axis)
+_STACKED = frozenset({"layers", "enc_layers", "dec_layers"})
+# MoE expert slabs [E, ., .]: expert axis over `model` (expert parallelism)
+_EXPERT = frozenset({"we1", "we2", "we3"})
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    """Mesh axes carrying the batch dimension, outermost first."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_spec(mesh) -> P:
+    """Spec for [B, ...] batch inputs (tokens/frames): B over pod+data."""
+    axes = batch_axes(mesh)
+    return P(axes) if axes else P()
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _fit(spec: tuple, shape: tuple, mesh) -> P:
+    """Drop any axis that is absent from the mesh or does not divide its
+    dim; pad/trim the spec to the leaf's rank."""
+    spec = tuple(spec) + (None,) * (len(shape) - len(spec))
+    out = []
+    for dim, axis in zip(shape, spec[:len(shape)]):
+        if axis is None:
+            out.append(None)
+            continue
+        names = axis if isinstance(axis, tuple) else (axis,)
+        if all(a in mesh.axis_names for a in names) \
+                and dim % _axis_size(mesh, axis) == 0:
+            out.append(axis)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for k in path:
+        if isinstance(k, DictKey):
+            names.append(str(k.key))
+        elif isinstance(k, SequenceKey):
+            names.append(f"#{k.idx}")
+        else:
+            names.append(str(k))
+    return names
+
+
+def _param_rule(names: list[str], shape: tuple, mesh, fsdp):
+    """Base spec (before the stacked-L prefix) for one param leaf."""
+    name = names[-1]
+    parent = names[-2] if len(names) >= 2 else ""
+    tp = mesh.shape["model"] if "model" in mesh.axis_names else 1
+
+    if name == "w":
+        if parent == "router":
+            return ()                       # replicated (routing is local)
+        if parent in _ROW_PARALLEL:
+            return ("model", fsdp)          # [k, m]: input dim sharded
+        return (fsdp, "model")              # column-parallel: T output shards
+    if name == "cdc":
+        # folded parity slots [T, k, r*w]: slot axis over `model` so slot d
+        # rides on the same device as data shard d (whole-device failure
+        # erases exactly its own slices). dedicated parity [r, k, m_l]:
+        # shard the parity columns instead (the +r devices live off-mesh).
+        # The layouts are told apart by the leading dim (T vs r); when they
+        # collide (dedicated with r == T — full duplication, outside the
+        # paper's r << T regime) the folded placement wins. Placement only:
+        # GSPMD numerics are identical either way.
+        if len(shape) >= 3 and shape[-3] == tp:
+            return ("model", fsdp, None)
+        return (None, fsdp, "model")
+    if name == "embed":
+        return ("model", fsdp)              # vocab rows over `model`
+    if name in _EXPERT:
+        return ("model", fsdp, None)        # EP: expert slab per rank
+    return ()                               # norms, biases, scalars, ...
+
+
+def param_specs(params, mesh, *, fsdp: str | None = "data"):
+    """PartitionSpec pytree for a model param pytree (arrays or shape
+    structs). ``fsdp=None`` replicates weights over the data axis (serving
+    layout)."""
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        shape = tuple(leaf.shape)
+        stacked = any(n in _STACKED for n in names)
+        base = _param_rule(names, shape[1:] if stacked else shape, mesh,
+                           fsdp)
+        if stacked:
+            base = (None,) + tuple(base)
+        return _fit(base, shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def param_shardings(params, mesh, *, fsdp: str | None = "data"):
+    """NamedSharding pytree ready for ``jax.device_put`` / ``in_shardings``."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, mesh, fsdp=fsdp),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def state_specs(state, mesh):
+    """Decode-state layout: batch dim over pod+data, bookkeeping replicated.
+
+    KV caches / SSM states under scan-stacked containers carry a leading L
+    axis (batch is dim 1); xLSTM's per-block list states put batch at dim 0.
+    ``len``/``pos`` counters are replicated.
+    """
+    axes = batch_axes(mesh)
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        shape = tuple(leaf.shape)
+        if not axes or names[-1] in ("len", "pos") or len(shape) < 2:
+            return P()
+        b_dim = 0 if names[0] == "blocks" else 1
+        spec = [None] * len(shape)
+        spec[b_dim] = axes
+        return _fit(tuple(spec), shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, state)

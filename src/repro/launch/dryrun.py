@@ -1,5 +1,13 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# A caller-supplied device count (e.g. the 8-fake-device CI/test
+# environment) wins; otherwise append enough host devices for the
+# production meshes, preserving any unrelated pre-set XLA flags. Must
+# precede any (transitive) jax import.
+if "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = " ".join(filter(None, [
+        os.environ.get("XLA_FLAGS"),
+        "--xla_force_host_platform_device_count=512"]))
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
@@ -25,10 +33,12 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
-from repro.configs import SHAPES, all_archs, get_arch, runnable  # noqa: E402
+from repro.configs import (SHAPES, ShapeSpec, all_archs,  # noqa: E402
+                           get_arch, runnable, smoke_config)
 from repro.dist.sharding import (batch_spec, param_specs,  # noqa: E402
                                  state_specs)
-from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.mesh import (make_production_mesh,  # noqa: E402
+                               make_test_mesh)
 from repro.models import TPCtx, build  # noqa: E402
 from repro.optim import AdamWConfig, init_state  # noqa: E402
 from repro.roofline import roofline_report, roofline_terms  # noqa: E402
@@ -36,6 +46,13 @@ from repro.roofline.hlo_cost import analyze_hlo  # noqa: E402
 from repro.train.train_step import TrainConfig, make_train_step  # noqa: E402
 
 DEFAULT_OUT = "/root/repo/results/dryrun.json"
+
+# --smoke: end-to-end proof on 8 fake host devices (CI / laptops). Same
+# lower+compile pipeline, reduced configs, (2,4) / (2,2,2) test meshes.
+SMOKE_SHAPES: dict[str, ShapeSpec] = {
+    "train_smoke": ShapeSpec("train_smoke", 64, 8, "train"),
+    "decode_smoke": ShapeSpec("decode_smoke", 128, 8, "decode"),
+}
 
 
 def count_params(params_shape, cfg) -> tuple[int, int]:
@@ -104,15 +121,20 @@ def _shardings(tree_specs, mesh):
 
 
 def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
-               coded: bool = False, code_r: int = 2,
+               coded: bool = False, code_r: int = 2, smoke: bool = False,
                verbose: bool = True) -> dict:
     cfg = get_arch(arch)
-    shape = SHAPES[shape_name]
+    shape = SMOKE_SHAPES.get(shape_name) or SHAPES[shape_name]
     ok, why = runnable(cfg, shape)
     if not ok:
         return {"status": "skip", "why": why}
 
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    if smoke:
+        cfg = smoke_config(cfg)
+        mesh = make_test_mesh(2, 2, pod=2) if multi_pod \
+            else make_test_mesh(2, 4)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
     tp = mesh.shape["model"]
     ctx = TPCtx(tp=tp, mode="coded" if coded else "plain", code_r=code_r,
                 mesh=mesh)
@@ -227,6 +249,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     xla_cost = compiled.cost_analysis()
+    if isinstance(xla_cost, (list, tuple)):  # older jax: one dict per device
+        xla_cost = xla_cost[0] if xla_cost else None
     hlo = compiled.as_text()
     # trip-count-weighted analysis (XLA's cost_analysis counts loop bodies
     # once; see roofline/hlo_cost.py)
@@ -237,7 +261,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     # roofline
     terms = roofline_terms({"flops": wcost["flops"],
                             "bytes accessed": wcost["bytes"]}, coll)
-    chips = 512 if multi_pod else 256
+    chips = mesh.size
     n_active, n_total = count_params(params_shape, cfg)
     if shape.kind == "train":
         tokens = shape.global_batch * shape.seq_len
@@ -256,10 +280,11 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
               "generated_code_size_in_bytes"):
         mem_fields[f] = getattr(mem, f, None)
 
+    mesh_label = "x".join(str(s) for s in mesh.devices.shape)
     rec = {
         "status": "ok",
         "arch": arch, "shape": shape_name,
-        "mesh": "pod2x16x16" if multi_pod else "16x16",
+        "mesh": ("pod" + mesh_label) if multi_pod else mesh_label,
         "coded": coded,
         "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
         "memory": mem_fields,
@@ -282,17 +307,25 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None,
-                    choices=list(SHAPES) + [None])
+                    choices=list(SHAPES) + list(SMOKE_SHAPES) + [None])
     ap.add_argument("--mesh", default="single",
                     choices=["single", "multi", "both"])
     ap.add_argument("--coded", action="store_true")
     ap.add_argument("--code-r", type=int, default=2)
+    ap.add_argument("--smoke", action="store_true",
+                    help="8-device end-to-end proof: smoke configs on the "
+                         "(2,4)/(2,2,2) test meshes, smoke shapes")
     ap.add_argument("--out", default=DEFAULT_OUT)
     ap.add_argument("--all", action="store_true")
     args = ap.parse_args()
 
-    archs = [args.arch] if args.arch else sorted(all_archs())
-    shapes = [args.shape] if args.shape else list(SHAPES)
+    if args.smoke:
+        archs = [args.arch] if args.arch else (
+            sorted(all_archs()) if args.all else ["granite-3-8b"])
+        shapes = [args.shape] if args.shape else list(SMOKE_SHAPES)
+    else:
+        archs = [args.arch] if args.arch else sorted(all_archs())
+        shapes = [args.shape] if args.shape else list(SHAPES)
     meshes = {"single": [False], "multi": [True],
               "both": [False, True]}[args.mesh]
 
@@ -302,11 +335,14 @@ def main():
         with open(args.out) as f:
             results = json.load(f)
 
+    run_keys = []
     for arch in archs:
         for shape in shapes:
             for mp in meshes:
                 key = f"{arch}|{shape}|{'multi' if mp else 'single'}" + \
-                    ("|coded" if args.coded else "")
+                    ("|coded" if args.coded else "") + \
+                    ("|smoke" if args.smoke else "")
+                run_keys.append(key)
                 if key in results and results[key].get("status") in \
                         ("ok", "skip"):
                     print(f"[cached] {key}")
@@ -315,7 +351,7 @@ def main():
                 try:
                     rec = lower_cell(arch, shape, multi_pod=mp,
                                      coded=args.coded, code_r=args.code_r,
-                                     verbose=False)
+                                     smoke=args.smoke, verbose=False)
                 except Exception as e:  # record the failure, keep going
                     rec = {"status": "error", "error": repr(e),
                            "trace": traceback.format_exc()[-2000:]}
@@ -328,10 +364,14 @@ def main():
                       f"dominant {rec.get('roofline', {}).get('dominant')})",
                       flush=True)
 
-    n_ok = sum(1 for r in results.values() if r["status"] == "ok")
-    n_skip = sum(1 for r in results.values() if r["status"] == "skip")
-    n_err = sum(1 for r in results.values() if r["status"] == "error")
+    # status over THIS run's grid only — a reused --out file may hold
+    # stale cells from other sweeps that were neither run nor retried
+    run = [results[k] for k in run_keys]
+    n_ok = sum(1 for r in run if r["status"] == "ok")
+    n_skip = sum(1 for r in run if r["status"] == "skip")
+    n_err = sum(1 for r in run if r["status"] == "error")
     print(f"done: {n_ok} ok, {n_skip} structured skips, {n_err} errors")
+    raise SystemExit(1 if n_err else 0)
 
 
 if __name__ == "__main__":

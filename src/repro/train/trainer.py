@@ -17,8 +17,10 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.ckpt import AsyncCheckpointer, latest_step, restore
+from repro.dist.sharding import param_shardings
 from repro.data import DataConfig, make_stream
 from repro.models.zoo import Model
 from repro.optim import AdamWConfig, init_state
@@ -65,9 +67,6 @@ class Trainer:
         params = self.model.encode_offline(params)
         opt_state = init_state(params)
         if self.mesh is not None:
-            from jax.sharding import NamedSharding, PartitionSpec
-
-            from repro.dist.sharding import param_shardings
             ps = param_shardings(params, self.mesh)
             params = jax.device_put(params, ps)
             opt_state = jax.device_put(opt_state, {

@@ -12,10 +12,7 @@ import textwrap
 
 import pytest
 
-# the repro.dist layer is not built yet (see ROADMAP "Open items");
-# these tests activate as soon as it lands.
-pytest.importorskip("repro.dist.sharding",
-                    reason="repro.dist not implemented yet (ROADMAP)")
+pytestmark = pytest.mark.multidev
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -144,13 +141,18 @@ def test_multipod_mesh_and_elastic_restore():
 
 
 def test_shardmap_coded_matmul_explicit_placement():
-    """The shard_map coded GEMM (explicit per-device placement) recovers a
-    dead device and matches the GSPMD/logical path."""
+    """Erasure sweep over the shard_map coded GEMM (explicit per-device
+    placement): EVERY single dead shard index for T=4, r=2 recovers and
+    matches both the plain GEMM and the GSPMD/logical path. The masks are
+    driven through the shard-health controller, which also maps each
+    erasure onto the real mesh devices holding that shard."""
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.core import CodedDenseSpec, CodeSpec, coded_matmul, \\
             make_parity_weights
         from repro.dist.collectives import coded_matmul_shardmap
+        from repro.runtime.health import ShardHealthController, erasure, \\
+            recovery
 
         mesh = jax.make_mesh((2, 4), ("data", "model"))
         T = 4
@@ -160,10 +162,17 @@ def test_shardmap_coded_matmul_explicit_placement():
         w = jax.random.normal(kw, (64, T * T * 8)) / 8.0
         w_cdc = make_parity_weights(w, spec)
         ref = x @ w
-        for dead in (None, 0, 2, 3):
-            valid = jnp.ones(T, bool)
+        ctrl = ShardHealthController(T, spec.max_device_failures)
+        for dead in (None,) + tuple(range(T)):
             if dead is not None:
-                valid = valid.at[dead].set(False)
+                ctrl.apply(erasure(0.0, dead))
+            valid = jnp.asarray(ctrl.mask)
+            # logical shard <-> physical device placement is real: the
+            # controller names the mesh devices the erasure hit
+            dmask = ctrl.device_mask(mesh)
+            assert dmask.shape == mesh.devices.shape
+            assert len(ctrl.dead_devices(mesh)) == \\
+                (0 if dead is None else 2)  # one per data replica
             got = coded_matmul_shardmap(x, w, w_cdc, spec, valid, mesh=mesh)
             np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                        rtol=2e-3, atol=2e-3)
@@ -171,6 +180,8 @@ def test_shardmap_coded_matmul_explicit_placement():
             np.testing.assert_allclose(np.asarray(got),
                                        np.asarray(logical),
                                        rtol=1e-4, atol=1e-4)
+            if dead is not None:
+                ctrl.apply(recovery(1.0, dead))
         print("OK")
     """)
     assert "OK" in out

@@ -6,10 +6,7 @@ import textwrap
 
 import pytest
 
-# the repro.dist layer is not built yet (see ROADMAP "Open items");
-# these tests activate as soon as it lands.
-pytest.importorskip("repro.dist.pipeline",
-                    reason="repro.dist not implemented yet (ROADMAP)")
+pytestmark = pytest.mark.multidev
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

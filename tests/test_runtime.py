@@ -246,3 +246,46 @@ def test_sim_clock():
     assert c.now() == 2.5
     with pytest.raises(ValueError):
         c.advance(-1.0)
+
+
+# ----------------------------------------------------- mesh placement ----
+
+class _FakeMesh:
+    """Duck-typed stand-in for jax.sharding.Mesh (the mapping helpers only
+    read axis_names / shape / devices), so placement logic is unit-testable
+    on a 1-device host; the real-mesh integration runs in the multidev
+    subprocess suite."""
+
+    def __init__(self, axes: dict):
+        self.axis_names = tuple(axes)
+        self.shape = dict(axes)
+        n = int(np.prod(list(axes.values())))
+        self.devices = np.arange(n).reshape(tuple(axes.values()))
+
+
+def test_health_maps_shards_onto_mesh_devices():
+    mesh = _FakeMesh({"data": 2, "model": 4})
+    h = ShardHealthController(4, budget=1)
+    by_shard = h.shard_devices(mesh)
+    # model-rank i holds shard i, once per data replica (column i)
+    assert by_shard[2] == (2, 6)
+    assert h.apply(erasure(0.0, 2)) is HealthAction.CONTINUE
+    dmask = h.device_mask(mesh)
+    assert dmask.shape == (2, 4)
+    assert not dmask[:, 2].any() and dmask[:, [0, 1, 3]].all()
+    assert h.dead_devices(mesh) == (2, 6)
+    h.apply(recovery(1.0, 2))
+    assert h.device_mask(mesh).all() and h.dead_devices(mesh) == ()
+
+
+def test_health_mesh_mapping_respects_pod_axis_and_validates():
+    mesh = _FakeMesh({"pod": 2, "data": 2, "model": 2})
+    h = ShardHealthController(2, budget=1)
+    h.apply(erasure(0.0, 1))
+    # shard 1 = model-rank 1 in every (pod, data) replica: odd device ids
+    assert h.dead_devices(mesh) == (1, 3, 5, 7)
+    assert h.device_mask(mesh)[:, :, 0].all()
+    with pytest.raises(ValueError):
+        h.shard_devices(_FakeMesh({"data": 2, "model": 4}))  # T mismatch
+    with pytest.raises(ValueError):
+        h.device_mask(_FakeMesh({"data": 2, "rows": 2}))  # no model axis
