@@ -8,6 +8,13 @@ the coded runtime must absorb it in-step and complete 100% of admitted
 requests ("the system never loses a request"), while the uncoded baseline
 pays the 2MR requeue path. Emits a JSON metrics report.
 
+Alongside the modelled (sim-clock) numbers the report carries MEASURED
+wall-clock round latency, and an executor comparison: the same coded
+workload through the batched slot executor (one jitted dispatch per
+round) vs sequential per-slot stepping (n_slots dispatches). The
+comparison is written to ``BENCH_serve.json`` (repo root) as the bench
+trajectory seed.
+
 Run:  PYTHONPATH=src python benchmarks/serve_throughput.py --smoke
       PYTHONPATH=src python benchmarks/serve_throughput.py --smoke \
           --n-requests 32 --rate-rps 40 --out results/serve_throughput.json
@@ -16,6 +23,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import time
 
 import jax
 import numpy as np
@@ -40,30 +48,70 @@ def make_workload(rng: np.random.Generator, n_requests: int, rate_rps: float,
 
 def run_mode(cfg, workload, *, coded: bool, tp: int, code_r: int,
              n_slots: int, fail_time_ms: float | None, fail_shard: int,
-             straggler: StragglerModel, seed: int) -> dict:
-    ctx = TPCtx(tp=tp, mode="coded" if coded else "plain", code_r=code_r,
-                moe_capacity=0)
-    model = build(cfg, ctx)
-    params = model.init(jax.random.PRNGKey(0))
-    max_len = max(len(p) + n for _, p, n in workload) + 8
-    stepper = ModelStepper(model, params, max_len=max_len)
+             straggler: StragglerModel, seed: int,
+             batched: bool | None = None, stepper=None) -> dict:
+    if stepper is None:
+        ctx = TPCtx(tp=tp, mode="coded" if coded else "plain",
+                    code_r=code_r, moe_capacity=0)
+        model = build(cfg, ctx)
+        params = model.init(jax.random.PRNGKey(0))
+        max_len = max(len(p) + n for _, p, n in workload) + 8
+        stepper = ModelStepper(model, params, max_len=max_len)
     events = [] if fail_time_ms is None else [erasure(fail_time_ms,
                                                       fail_shard)]
     health = ShardHealthController(stepper.n_shards, stepper.erasure_budget,
                                    events=events)
     sched = ContinuousBatchingScheduler(
         stepper, RuntimeConfig(n_slots=n_slots, straggler=straggler,
-                               seed=seed), health=health)
+                               seed=seed, batched=batched), health=health)
+    t0 = time.perf_counter()
     completed = run_arrivals(sched, workload)
+    wall_s = time.perf_counter() - t0
     snap = sched.metrics.snapshot()
     snap["mode"] = "coded" if coded else "uncoded"
+    snap["executor"] = "sequential" if sched.executor is None else "batched"
     snap["erasure_budget"] = stepper.erasure_budget
     snap["completed_all"] = (snap["counters"]["requests_completed"]
                              == snap["counters"]["requests_submitted"]
                              == len(workload))
     snap["max_requeues_seen"] = max((r.n_requeues for r in completed),
                                     default=0)
+    rounds = snap["counters"]["decode_rounds"]
+    snap["wall_s"] = wall_s
+    snap["rounds_per_s_wall"] = rounds / wall_s if wall_s > 0 else None
+    # steady-state rate from the measured per-round latency (p50 is robust
+    # to the first-round compile outlier)
+    meas = snap["round_latency_measured"]
+    snap["rounds_per_s"] = (1e3 / meas["p50_ms"]
+                            if meas.get("p50_ms") else None)
     return snap
+
+
+def executor_comparison(cfg, workload, common: dict) -> dict:
+    """Same coded workload, batched executor vs sequential stepping, one
+    shared stepper (identical params/compile cache baseline)."""
+    ctx = TPCtx(tp=common["tp"], mode="coded", code_r=common["code_r"],
+                moe_capacity=0)
+    model = build(cfg, ctx)
+    params = model.init(jax.random.PRNGKey(0))
+    max_len = max(len(p) + n for _, p, n in workload) + 8
+    stepper = ModelStepper(model, params, max_len=max_len)
+    out = {}
+    for name, batched in (("sequential", False), ("batched", True)):
+        snap = run_mode(cfg, workload, coded=True, stepper=stepper,
+                        batched=batched, **common)
+        out[name] = {
+            "rounds_per_s": snap["rounds_per_s"],
+            "rounds_per_s_wall": snap["rounds_per_s_wall"],
+            "wall_s": snap["wall_s"],
+            "decode_rounds": snap["counters"]["decode_rounds"],
+            "round_latency_measured": snap["round_latency_measured"],
+            "completed_all": snap["completed_all"],
+        }
+    seq, bat = out["sequential"], out["batched"]
+    if seq["rounds_per_s"] and bat["rounds_per_s"]:
+        out["batched_speedup"] = bat["rounds_per_s"] / seq["rounds_per_s"]
+    return out
 
 
 def main():
@@ -85,6 +133,10 @@ def main():
     ap.add_argument("--skip-uncoded", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None, help="write JSON report here")
+    ap.add_argument("--bench-out", default="BENCH_serve.json",
+                    help="batched-vs-sequential bench report path "
+                         "('' disables)")
+    ap.add_argument("--skip-executor-compare", action="store_true")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -119,6 +171,9 @@ def main():
             report["p99_improvement_pct"] = 100 * (
                 1 - c["request_latency"]["p99_ms"]
                 / u["request_latency"]["p99_ms"])
+    if not args.skip_executor_compare:
+        report["executor_comparison"] = executor_comparison(cfg, workload,
+                                                            common)
 
     print(json.dumps(report, indent=2, sort_keys=True))
     if args.out:
@@ -126,6 +181,14 @@ def main():
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:
             json.dump(report, f, indent=2, sort_keys=True)
+    if args.bench_out and "executor_comparison" in report:
+        bench = {
+            "bench": "serve_throughput",
+            "workload": report["workload"],
+            "executor_comparison": report["executor_comparison"],
+        }
+        with open(args.bench_out, "w") as f:
+            json.dump(bench, f, indent=2, sort_keys=True)
     if not report["coded"]["completed_all"]:
         raise SystemExit("coded runtime lost requests — this violates the "
                          "paper's continuity claim")

@@ -1,5 +1,6 @@
-"""Pallas kernel for the r=1 recovery combine (paper Eq. 12).
+"""Pallas kernels for the CDC decode hot path.
 
+``cdc_decode_pallas`` — the r=1 recovery combine (paper Eq. 12):
 y_missing = parity - sum_{i valid} y_i, then scatter into the erased slot:
   out[i] = valid[i] ? y[i] : (parity - sum_j valid[j]*y[j])
 This is the paper's "close-to-zero" recovery: one fused elementwise pass over
@@ -10,6 +11,15 @@ hot path that runs on EVERY request in coded serving.
 
 Layout: shard outputs stacked [T, rows, m_l]; tiles (rows, bn) with the full
 shard axis resident (T <= 64), validity mask as a [T] VMEM block.
+
+``cdc_fused_head_argmax_pallas`` — the batched-executor decode step: coded
+LM-head GEMM + Eq. 12 parity decode + greedy argmax in ONE kernel. Per
+column tile it computes every shard's head output y_d = x @ W_d plus the
+sum-parity output p = x @ W_cdc0, recovers an erased shard in-register, and
+folds a running (max, argmax) over the merged vocabulary — the [B, vocab]
+logits tensor is never materialised in HBM. Tolerates one erased shard
+(generator row 0 is the paper's all-ones sum code); the executor falls back
+to the reference path for multi-erasure rounds.
 """
 from __future__ import annotations
 
@@ -52,3 +62,110 @@ def cdc_decode_pallas(y_shards: jax.Array, parity: jax.Array,
         out_shape=jax.ShapeDtypeStruct((t, m, n), y_shards.dtype),
         interpret=interpret,
     )(valid, y_shards, parity[None])
+
+
+# ------------------------------------------------------ fused head+argmax ----
+
+NEG_INF = -1e30  # python float: jnp scalars would be captured consts
+
+
+def _fused_head_kernel(valid_ref, x_ref, w_ref, pw_ref, oval_ref, oidx_ref,
+                       *, m_l: int, bn: int, vocab: int):
+    """One vocab tile of the fused coded head: GEMM -> Eq. 12 -> running
+    argmax. The grid walks the shard-local column tiles sequentially; the
+    (b, 1) output blocks are revisited at every step and carry the running
+    (max logit, global argmax) across tiles."""
+    j = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)            # [b, k]
+    w = w_ref[...].astype(jnp.float32)            # [T, k, bn]
+    pw = pw_ref[...].astype(jnp.float32)          # [k, bn]
+    valid = valid_ref[...]                        # [T] bool
+    T = w.shape[0]
+
+    # coded matmul: every shard's tile plus the sum-parity tile (MXU)
+    y = jnp.einsum("bk,tkn->tbn", x, w,
+                   preferred_element_type=jnp.float32)
+    p = jnp.dot(x, pw, preferred_element_type=jnp.float32)   # [b, bn]
+
+    # parity decode (Eq. 12): zero the erased shard, rebuild it from parity
+    vm = valid.astype(jnp.float32)[:, None, None]
+    yz = y * vm
+    missing = p - jnp.sum(yz, axis=0)             # [b, bn]
+    rec = yz + (1.0 - vm) * missing[None]         # [T, b, bn]
+
+    # merged-vocab column ids: shard t's tile covers t*m_l + j*bn + c
+    t_ids = jax.lax.broadcasted_iota(jnp.int32, (T, bn), 0)
+    c_ids = jax.lax.broadcasted_iota(jnp.int32, (T, bn), 1)
+    gid = t_ids * m_l + j * bn + c_ids            # [T, bn]
+
+    logits = jnp.moveaxis(rec, 1, 0)              # [b, T, bn]
+    logits = jnp.where((gid < vocab)[None], logits, NEG_INF)
+    flat = logits.reshape(logits.shape[0], T * bn)
+    # gid is strictly increasing along the flat (t-major) order, so the
+    # first-occurrence argmax below is also the smallest global id
+    vmax = jnp.max(flat, axis=1)                  # [b]
+    amax = jnp.argmax(flat, axis=1).astype(jnp.int32)
+    gbest = (amax // bn) * m_l + j * bn + amax % bn
+
+    nv, ni = vmax[:, None], gbest[:, None]
+
+    @pl.when(j == 0)
+    def _():
+        oval_ref[...] = nv
+        oidx_ref[...] = ni
+
+    @pl.when(j > 0)
+    def _():
+        cv, ci = oval_ref[...], oidx_ref[...]
+        # strict argmax semantics: ties go to the smaller global id
+        better = (nv > cv) | ((nv == cv) & (ni < ci))
+        oval_ref[...] = jnp.where(better, nv, cv)
+        oidx_ref[...] = jnp.where(better, ni, ci)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("vocab", "bn", "interpret"))
+def cdc_fused_head_argmax_pallas(x: jax.Array, w_shards: jax.Array,
+                                 parity_w: jax.Array, valid: jax.Array, *,
+                                 vocab: int, bn: int = 128,
+                                 interpret: bool = False
+                                 ) -> tuple[jax.Array, jax.Array]:
+    """Fused coded LM head + parity decode + greedy argmax.
+
+    x:        [b, k] last-position hidden states (post final norm).
+    w_shards: [T, k, m_l] column shards of the (padded) head weight.
+    parity_w: [k, m_l] sum-parity head weight (generator row 0, all-ones).
+    valid:    [T] bool shard validity; at most ONE False (Eq. 12 regime —
+              the caller falls back to the reference MDS path beyond that).
+    vocab:    logical vocabulary (merged columns >= vocab never win).
+
+    Returns (token [b] int32, max_logit [b] f32) — argmax over the merged
+    [b, T*m_l] logits, which are never materialised.
+    """
+    t, k, m_l = w_shards.shape
+    b = x.shape[0]
+    bn = min(bn, m_l)
+    while m_l % bn:
+        bn //= 2
+    kernel = functools.partial(_fused_head_kernel, m_l=m_l, bn=bn,
+                               vocab=vocab)
+    val, idx = pl.pallas_call(
+        kernel,
+        grid=(m_l // bn,),
+        in_specs=[
+            pl.BlockSpec((t,), lambda j: (0,)),
+            pl.BlockSpec((b, k), lambda j: (0, 0)),
+            pl.BlockSpec((t, k, bn), lambda j: (0, 0, j)),
+            pl.BlockSpec((k, bn), lambda j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, 1), lambda j: (0, 0)),
+            pl.BlockSpec((b, 1), lambda j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(valid, x, w_shards, parity_w)
+    return idx[:, 0], val[:, 0]

@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.cdc_decode import cdc_decode_pallas
+from repro.kernels.cdc_decode import (cdc_decode_pallas,
+                                      cdc_fused_head_argmax_pallas)
 from repro.kernels.cdc_encode import cdc_encode_pallas
 from repro.kernels.matmul import matmul_pallas
 from repro.kernels.rmsnorm import rmsnorm_pallas
@@ -42,6 +43,20 @@ def cdc_decode(y_shards, parity, valid, *, use_pallas=True, **block_kw):
         return ref.cdc_decode_ref(y_shards, parity, valid)
     return cdc_decode_pallas(y_shards, parity, valid,
                              interpret=_interpret(), **block_kw)
+
+
+def fused_head_argmax(x, w_shards, parity_w, valid, *, vocab,
+                      use_pallas=True, **block_kw):
+    """Fused coded LM-head GEMM + Eq. 12 parity decode + greedy argmax.
+
+    The batched executor's decode hot path: one kernel per round, the
+    merged [b, vocab] logits never hit HBM. Handles <= 1 erased shard.
+    """
+    if not use_pallas:
+        return ref.fused_head_argmax_ref(x, w_shards, parity_w, valid, vocab)
+    return cdc_fused_head_argmax_pallas(x, w_shards, parity_w, valid,
+                                        vocab=vocab, interpret=_interpret(),
+                                        **block_kw)
 
 
 def rmsnorm(x, gamma, *, eps=1e-6, use_pallas=True, **block_kw):

@@ -27,6 +27,23 @@ def cdc_decode_ref(y_shards: jax.Array, parity: jax.Array,
     return out.astype(y_shards.dtype)
 
 
+def fused_head_argmax_ref(x: jax.Array, w_shards: jax.Array,
+                          parity_w: jax.Array, valid: jax.Array,
+                          vocab: int) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the fused coded head: shard GEMMs + Eq. 12 recovery +
+    argmax over the merged logical vocabulary. Returns (token, max_logit)."""
+    y = jnp.einsum("bk,tkn->tbn", x.astype(jnp.float32),
+                   w_shards.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    p = jnp.dot(x.astype(jnp.float32), parity_w.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    rec = cdc_decode_ref(y, p, valid)             # [T, b, m_l]
+    merged = jnp.moveaxis(rec, 0, -2)             # [b, T, m_l]
+    merged = merged.reshape(merged.shape[0], -1)[:, :vocab]
+    return (jnp.argmax(merged, axis=-1).astype(jnp.int32),
+            jnp.max(merged, axis=-1))
+
+
 def rmsnorm_ref(x: jax.Array, gamma: jax.Array, eps: float = 1e-6
                 ) -> jax.Array:
     xf = x.astype(jnp.float32)

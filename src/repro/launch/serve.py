@@ -1,15 +1,20 @@
 """Serving driver: runtime-scheduled generation with CDC fault injection.
 
 Drives the coded cluster runtime (``repro.runtime``): requests are
-submitted to the continuous-batching scheduler and a shard erasure can be
-injected at a simulated time; within the code's budget the runtime
-recovers in-step, beyond it the CDC+2MR hybrid requeues and heals.
+submitted to the continuous-batching scheduler — by default the BATCHED
+slot executor advances every decode slot in one jitted dispatch per round
+— and a shard erasure can be injected at a simulated time; within the
+code's budget the runtime recovers in-step, beyond it the CDC+2MR hybrid
+requeues and heals.
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b --smoke \\
       --coded --fail-time-ms 4 --fail-shard 2
 
-``--legacy`` runs the old one-batch-at-a-time ServingEngine path with the
-original --fail-step semantics.
+``--sequential`` steps slots one dispatch each (the pre-executor path),
+``--no-overlap`` disables host/device round pipelining, ``--deadline-ms``
+and ``--max-queue-depth`` exercise the SLO admission queue. ``--legacy``
+runs the old one-batch-at-a-time ServingEngine path with the original
+--fail-step semantics.
 """
 from __future__ import annotations
 
@@ -62,6 +67,16 @@ def main():
     ap.add_argument("--fail-step", type=int, default=-1,
                     help="legacy mode: decode step to kill the shard at")
     ap.add_argument("--legacy", action="store_true")
+    ap.add_argument("--sequential", action="store_true",
+                    help="per-slot stepping instead of the batched executor")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="harvest each round synchronously (no pipelining)")
+    ap.add_argument("--fused", action="store_true",
+                    help="force the Pallas fused head (interpret off-TPU)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request SLO deadline after arrival")
+    ap.add_argument("--max-queue-depth", type=int, default=None,
+                    help="shed requests beyond this queue depth")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -80,16 +95,35 @@ def main():
         if args.fail_time_ms >= 0 else []
     health = ShardHealthController(stepper.n_shards, stepper.erasure_budget,
                                    events=events)
-    sched = ContinuousBatchingScheduler(
-        stepper, RuntimeConfig(n_slots=args.batch), health=health)
+    rcfg = RuntimeConfig(n_slots=args.batch,
+                         batched=False if args.sequential else None,
+                         overlap=not args.no_overlap,
+                         use_fused=True if args.fused else "auto",
+                         max_queue_depth=args.max_queue_depth)
+    sched = ContinuousBatchingScheduler(stepper, rcfg, health=health)
     rng = np.random.default_rng(1)
-    arrivals = [(i * args.arrival_gap_ms,
-                 rng.integers(0, cfg.vocab, args.prompt_len),
-                 args.gen_tokens) for i in range(args.requests)]
-    completed = run_arrivals(sched, arrivals)
-    print(f"completed {len(completed)}/{args.requests} requests")
+    if args.deadline_ms is not None:
+        arrivals = []
+        for i in range(args.requests):
+            t = i * args.arrival_gap_ms
+            sched.submit(rng.integers(0, cfg.vocab, args.prompt_len),
+                         args.gen_tokens, arrival_ms=None,
+                         deadline_ms=t + args.deadline_ms)
+        completed = sched.run()
+    else:
+        arrivals = [(i * args.arrival_gap_ms,
+                     rng.integers(0, cfg.vocab, args.prompt_len),
+                     args.gen_tokens) for i in range(args.requests)]
+        completed = run_arrivals(sched, arrivals)
+    mode = "sequential" if sched.executor is None else \
+        ("batched+overlap" if rcfg.overlap else "batched")
+    print(f"completed {len(completed)}/{args.requests} requests "
+          f"({mode}; shed {len(sched.shed)})")
     if completed:
         print("tokens (first request):", completed[0].tokens)
+    if sched.executor is not None:
+        print(f"executor: {sched.executor.vstep.n_dispatches} round "
+              f"dispatches, {sched.executor.vstep.n_traces} trace(s)")
     print(sched.metrics.to_json())
     if args.coded:
         print("straggler model (first-T-of-T+r):",

@@ -65,18 +65,38 @@ def attn_init(key, cfg, ctx: TPCtx, dtype) -> Params:
 
 
 def _mask(q_pos, k_pos, kind: str, window: int):
-    """q_pos: [Sq], k_pos: [Sk] -> bool [Sq, Sk] (True = attend).
+    """q_pos: [..., Sq], k_pos: [..., Sk] -> bool [..., Sq, Sk] (True =
+    attend). The leading dims (if any) are per-row batch dims — slot-batched
+    decode gives every cache row its own position vector, so row b's mask is
+    built from positions[b].
 
     kinds: bidir (encoder/cross), causal, swa. Negative k_pos marks an empty
     cache slot and is never attended."""
-    dq, dk = q_pos[:, None], k_pos[None, :]
+    dq, dk = q_pos[..., :, None], k_pos[..., None, :]
     valid_slot = dk >= 0
     if kind == "bidir":
-        return valid_slot
+        return valid_slot & jnp.ones_like(dq, bool)
     m = (dk <= dq) & valid_slot
     if kind == "swa":
         m &= dk > dq - window
     return m
+
+
+def _apply_mask(s, msk, n_head_dims: int):
+    """Mask scores ``s`` shaped [B, <n_head_dims dims>, Sq, Sk] with ``msk``
+    [Sq, Sk] (shared across rows) or [B, Sq, Sk] (per-row positions)."""
+    if msk.ndim == 2:
+        idx = (None,) * (n_head_dims + 1)
+    else:
+        idx = (slice(None),) + (None,) * n_head_dims
+    return jnp.where(msk[idx], s, NEG_INF)
+
+
+def _chunk_pos(pos, n: int, chunk: int):
+    """[..., S] positions -> [n, ..., chunk] chunks (leading batch dims,
+    if any, are preserved per chunk)."""
+    pc = pos.reshape(pos.shape[:-1] + (n, chunk))
+    return jnp.moveaxis(pc, -2, 0)
 
 
 def _sdpa_chunked(q, k, v, q_pos, k_pos, *, kind: str, window: int,
@@ -84,6 +104,8 @@ def _sdpa_chunked(q, k, v, q_pos, k_pos, *, kind: str, window: int,
     """Online-softmax attention over expanded heads.
 
     q: [B, Sq, H, hd]; k/v: [B, Sk, Hkv, hd] with H = group * Hkv.
+    q_pos/k_pos: [Sq]/[Sk] shared positions, or [B, Sq]/[B, Sk] per-row
+    (slot-batched decode: every cache row carries its own positions).
     """
     b, sq, h, hd = q.shape
     sk = k.shape[1]
@@ -100,11 +122,12 @@ def _sdpa_chunked(q, k, v, q_pos, k_pos, *, kind: str, window: int,
     if pad_k:
         k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
-        k_pos = jnp.pad(k_pos, (0, pad_k), constant_values=-(10 ** 9))
+        k_pos = jnp.pad(k_pos, [(0, 0)] * (k_pos.ndim - 1) + [(0, pad_k)],
+                        constant_values=-(10 ** 9))
     hk = k.shape[2]
     kc = k.reshape(b, n_kv, kv_chunk, hk, hd)
     vc = v.reshape(b, n_kv, kv_chunk, hk, hd)
-    kpc = k_pos.reshape(n_kv, kv_chunk)
+    kpc = _chunk_pos(k_pos, n_kv, kv_chunk)
 
     def one_q_chunk(args):
         qi, qpi = args  # [B, qc, H, hd], [qc]
@@ -121,15 +144,15 @@ def _sdpa_chunked(q, k, v, q_pos, k_pos, *, kind: str, window: int,
                 s = jnp.einsum("bqkgd,bckd->bkgqc", qg, ki,
                                preferred_element_type=jnp.float32) * scale
                 msk = _mask(qpi, kpi, kind, window)
-                s = jnp.where(msk[None, None, None], s, NEG_INF)
+                s = _apply_mask(s, msk, 2)
                 pr = jax.nn.softmax(s, axis=-1)
                 o = jnp.einsum("bkgqc,bckd->bqkgd", pr.astype(vi.dtype),
                                vi, preferred_element_type=jnp.float32)
                 return o.reshape(qi.shape)
             s = jnp.einsum("bqhd,bchd->bhqc", qi, ki,
                            preferred_element_type=jnp.float32) * scale
-            msk = _mask(qpi, kpi, kind, window)  # [qc, kc]
-            s = jnp.where(msk[None, None], s, NEG_INF)
+            msk = _mask(qpi, kpi, kind, window)  # [(B,) qc, kc]
+            s = _apply_mask(s, msk, 1)
             if carry is None:  # single-chunk fast path (decode)
                 p = jax.nn.softmax(s, axis=-1)
                 return jnp.einsum("bhqc,bchd->bqhd", p.astype(vi.dtype),
@@ -166,12 +189,12 @@ def _sdpa_chunked(q, k, v, q_pos, k_pos, *, kind: str, window: int,
     pad_q = n_q * q_chunk - sq
     if pad_q:
         q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
-        q_pos = jnp.pad(q_pos, (0, pad_q))
+        q_pos = jnp.pad(q_pos, [(0, 0)] * (q_pos.ndim - 1) + [(0, pad_q)])
     if n_q == 1:
         out = one_q_chunk((q, q_pos))
     else:
         qs = jnp.moveaxis(q.reshape(b, n_q, q_chunk, h, hd), 1, 0)
-        qps = q_pos.reshape(n_q, q_chunk)
+        qps = _chunk_pos(q_pos, n_q, q_chunk)
         outs = jax.lax.map(one_q_chunk, (qs, qps))  # [n_q, B, qc, H, hd]
         out = jnp.moveaxis(outs, 0, 1).reshape(b, n_q * q_chunk, h, hd)
     return out[:, :sq]
@@ -188,7 +211,13 @@ def _cache_update(cache, k, v, positions, s: int, C: int):
                jnp.roll of the last C entries, no scatter.
       else   : general scatter (host-side engine path; never lowered in the
                production decode cells).
+
+    Per-row caches (``len``: [B], ``pos``: [B, C] — the slot-batched decode
+    layout where each row sits at its own position) dispatch to
+    ``_cache_update_per_row`` instead.
     """
+    if cache["len"].ndim:
+        return _cache_update_per_row(cache, k, v, positions, s, C)
     kd, vd = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
     if s == 1:
         slot = cache["len"] % C
@@ -213,6 +242,37 @@ def _cache_update(cache, k, v, positions, s: int, C: int):
     return k_cached, v_cached, cpos
 
 
+def _cache_update_per_row(cache, k, v, positions, s: int, C: int):
+    """Ring-cache write when every row has its own length/positions.
+
+    cache: {"k"/"v": [B, C, H, hd], "pos": [B, C], "len": [B]};
+    positions: [B, s]. The decode hot path (s == 1) stays scatter-free: a
+    one-hot row-slot select lets each GSPMD shard resolve its own writes
+    locally, exactly like the scalar dynamic-update-slice above.
+    """
+    kd, vd = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
+    pd = positions.astype(cache["pos"].dtype)
+    if s == 1:
+        slot = cache["len"] % C                             # [B]
+        oh = jnp.arange(C)[None, :] == slot[:, None]        # [B, C]
+        k_cached = jnp.where(oh[..., None, None], kd, cache["k"])
+        v_cached = jnp.where(oh[..., None, None], vd, cache["v"])
+        cpos = jnp.where(oh, pd, cache["pos"])
+        return k_cached, v_cached, cpos
+    if s >= C:
+        # only the last C tokens survive in the ring (SWA prefill)
+        kd, vd, pd = kd[:, -C:], vd[:, -C:], pd[:, -C:]
+        offs = jnp.arange(C) + (s - C)
+    else:
+        offs = jnp.arange(s)
+    slot = (cache["len"][:, None] + offs[None, :]) % C      # [B, s']
+    bidx = jnp.arange(cache["k"].shape[0])[:, None]
+    k_cached = cache["k"].at[bidx, slot].set(kd)
+    v_cached = cache["v"].at[bidx, slot].set(vd)
+    cpos = cache["pos"].at[bidx, slot].set(pd)
+    return k_cached, v_cached, cpos
+
+
 def attention(ctx: TPCtx, p: Params, cfg, x: jax.Array, *,
               valid=None, cache: Params | None = None,
               pos_offset=0, q_chunk: int = 512, kv_chunk: int = 1024,
@@ -223,7 +283,10 @@ def attention(ctx: TPCtx, p: Params, cfg, x: jax.Array, *,
       cfg.attn_kind: full->causal, swa->swa.
     kv_override: (k, v, k_pos) — cross-attention with external KV.
     cache (decode): {"k": [B, C, Hkv, hd], "v": ..., "pos": [C] (neg =
-      empty), "len": scalar}. C = window for SWA (ring buffer).
+      empty), "len": scalar}. C = window for SWA (ring buffer). Per-row
+      caches ("pos": [B, C], "len": [B]) give every row its own position;
+      ``pos_offset`` is then the [B] length vector and all masks/rope read
+      positions[b].
     """
     b, s, d = x.shape
     hd = cfg.hd
@@ -232,7 +295,9 @@ def attention(ctx: TPCtx, p: Params, cfg, x: jax.Array, *,
         kind = "swa" if cfg.attn_kind == "swa" else "causal"
     q = col_dense(ctx, p["wq"], x, hq_run * hd, valid) \
         .reshape(b, s, hq_run, hd)
-    positions = pos_offset + jnp.arange(s)
+    # scalar offset -> [s] shared positions; [B] offset -> [B, s] per-row
+    positions = jnp.asarray(pos_offset)[..., None] + jnp.arange(s)
+    positions = positions if positions.ndim > 1 else positions.reshape(s)
     new_cache = cache
 
     if kv_override is not None:
@@ -319,13 +384,17 @@ def cross_kv(ctx: TPCtx, p: Params, cfg, enc_out: jax.Array, valid=None):
 
 
 def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
-               tp: int = 1) -> Params:
+               tp: int = 1, per_row: bool = False) -> Params:
+    """KV ring cache. ``per_row=True`` gives every batch row its own
+    position vector and length (slot-batched decode: rows advance
+    independently, admission overwrites one row without recompiling)."""
     C = min(max_len, cfg.window) if cfg.attn_kind == "swa" else max_len
     _, hkv_run, _ = attn_dims(cfg, tp)
     hd = cfg.hd
     return {
         "k": jnp.zeros((batch, C, hkv_run, hd), dtype),
         "v": jnp.zeros((batch, C, hkv_run, hd), dtype),
-        "pos": jnp.full((C,), -(10 ** 9), jnp.int32),
-        "len": jnp.zeros((), jnp.int32),
+        "pos": jnp.full((batch, C) if per_row else (C,), -(10 ** 9),
+                        jnp.int32),
+        "len": jnp.zeros((batch,) if per_row else (), jnp.int32),
     }

@@ -142,9 +142,17 @@ def forward(cfg, params: Params, ctx: TPCtx, tokens: jax.Array,
 # --------------------------------------------------------------- decode ----
 
 def init_decode_state(cfg, ctx: TPCtx, batch: int, max_len: int,
-                      dtype=jnp.bfloat16) -> Params:
+                      dtype=jnp.bfloat16, per_row: bool = False) -> Params:
+    """``per_row=True`` builds the slot-batched layout: the KV cache length
+    is a per-row position vector ([B] per layer) instead of one scalar, so
+    rows decode at independent positions in a single dispatch and slot
+    admission rewrites one row in place without recompiling."""
     state: Params = {}
     if cfg.ssm_kind == "xlstm":
+        if per_row:
+            raise NotImplementedError(
+                "per-row decode state needs a KV cache; xLSTM blocks are "
+                "positionless recurrent state (slot-batch via vmap instead)")
         st = []
         for kind in xlstm_block_kinds(cfg):
             init = xlstm_mod.init_slstm_state if kind == "slstm" \
@@ -154,7 +162,8 @@ def init_decode_state(cfg, ctx: TPCtx, batch: int, max_len: int,
         return state
 
     def one(_):
-        return attn_mod.init_cache(cfg, batch, max_len, dtype, tp=ctx.tp)
+        return attn_mod.init_cache(cfg, batch, max_len, dtype, tp=ctx.tp,
+                                   per_row=per_row)
 
     state["kv"] = jax.vmap(one)(jnp.arange(cfg.n_layers))
     if cfg.family == "hybrid":
@@ -166,13 +175,17 @@ def init_decode_state(cfg, ctx: TPCtx, batch: int, max_len: int,
 
 def decode_step(cfg, params: Params, ctx: TPCtx, state: Params,
                 tokens: jax.Array, valid: jax.Array | None = None,
-                *, kv_chunk: int = 1024, last_only: bool = False
+                *, kv_chunk: int = 1024, last_only: bool = False,
+                return_hidden: bool = False
                 ) -> tuple[jax.Array, Params]:
     """tokens: [B, s] (s=1 for pure decode) -> (logits [B, s, V], state).
 
     last_only: compute logits for the final position only (prefill returns
     the cache + one logit row; computing [B, 32k, 150k] logits would be
-    hundreds of GB of dead temps)."""
+    hundreds of GB of dead temps).
+    return_hidden: skip the LM head and return the post-ln_f hidden states
+    instead of logits — the batched executor fuses head GEMM + parity
+    decode + argmax into one Pallas kernel (kernels.cdc_decode)."""
     x = params["embed"][tokens].astype(params["embed"].dtype)
     x = ctx.shard_act(x)
 
@@ -186,10 +199,13 @@ def decode_step(cfg, params: Params, ctx: TPCtx, state: Params,
         if last_only:
             x = x[:, -1:]
         x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        if return_hidden:
+            return x, {"blocks": new_states}
         logits = col_dense(ctx, params["lm_head"], x, cfg.vocab, valid)
         return logits.astype(jnp.float32), {"blocks": new_states}
 
-    pos = state["kv"]["len"][0]  # same for all layers
+    # [] (scalar, shared) or [B] (per-row slot positions); same all layers
+    pos = state["kv"]["len"][0]
 
     def body(x, inp):
         p, cache, ms = inp
@@ -211,5 +227,7 @@ def decode_step(cfg, params: Params, ctx: TPCtx, state: Params,
     if last_only:
         x = x[:, -1:]
     x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if return_hidden:
+        return x, new_state
     logits = col_dense(ctx, params["lm_head"], x, cfg.vocab, valid)
     return logits.astype(jnp.float32), new_state

@@ -2,15 +2,21 @@
 
 The runtime layer turns the paper's per-request fault-tolerance math
 (``repro.core``) and the model stepper (``repro.serve``) into a serving
-system under sustained load: a request queue feeding a fixed pool of
-decode slots, a health controller applying the CDC+2MR hybrid policy to
-live erasure events, and JSON-snapshot telemetry for the benchmarks.
+system under sustained load: a deadline-aware request queue feeding a
+fixed pool of decode slots, a batched slot executor advancing the whole
+pool in one jitted dispatch per round (``repro.runtime.executor``), a
+health controller applying the CDC+2MR hybrid policy to live erasure
+events, and JSON-snapshot telemetry (modelled AND measured round
+latency) for the benchmarks.
 """
 from repro.runtime.clock import Clock, SimClock, WallClock
+from repro.runtime.executor import (SlotPoolExecutor, VStep,
+                                    supports_slot_batching)
 from repro.runtime.health import (EventKind, HealthAction, ShardEvent,
                                   ShardHealthController, erasure, recovery,
                                   replica_failure)
 from repro.runtime.metrics import RuntimeMetrics
+from repro.runtime.queue import AdmissionQueue
 from repro.runtime.request import Request, RequestState
 from repro.runtime.scheduler import (ContinuousBatchingScheduler,
                                      RuntimeConfig, run_arrivals)
@@ -19,7 +25,8 @@ __all__ = [
     "Clock", "SimClock", "WallClock",
     "EventKind", "HealthAction", "ShardEvent", "ShardHealthController",
     "erasure", "recovery", "replica_failure",
-    "RuntimeMetrics",
+    "RuntimeMetrics", "AdmissionQueue",
     "Request", "RequestState",
+    "SlotPoolExecutor", "VStep", "supports_slot_batching",
     "ContinuousBatchingScheduler", "RuntimeConfig", "run_arrivals",
 ]

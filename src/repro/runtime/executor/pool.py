@@ -1,0 +1,144 @@
+"""Async device-pool executor: dispatch rounds, overlap host work, measure.
+
+The pool owns the stacked slot state and turns a scheduler round into ONE
+asynchronously dispatched device program. With ``overlap=True`` (the
+serving default) it pipelines host and device: ``step_round`` dispatches
+round N and only then blocks (``jax.block_until_ready``) on round N-1's
+tokens — so the host-side admission/eviction/queue work of step N runs
+while the device still computes round N-1, and a harvested completion
+frees its slot for the next admission. ``overlap=False`` harvests the
+round it just dispatched (exact sequential-scheduler semantics, used by
+the equivalence tests and the legacy facade).
+
+Every harvest records the MEASURED wall-clock dispatch->harvest time of
+that round into ``RuntimeMetrics.round_ms``: with ``overlap=False`` that
+is exactly the device dispatch->ready latency; with ``overlap=True`` it
+is the pipelined ROUND PERIOD (device time plus whatever host work the
+pipeline hid under it — the quantity whose inverse is sustained
+rounds/sec). The scheduler keeps feeding the modelled ``StragglerModel``
+numbers to the simulated clock, and ``RuntimeMetrics`` reports both
+series side by side.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.executor.slotbatch import (blank_state,
+                                              supports_slot_batching,
+                                              write_slot)
+from repro.runtime.executor.vstep import VStep
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundHandle:
+    """An in-flight round: its (async) token array, the (slot, tag) pairs
+    active at dispatch time, and the dispatch timestamp. Tags identify the
+    occupant a token belongs to — a slot re-admitted between dispatch and
+    harvest must not inherit its predecessor's token."""
+    toks: jax.Array               # [n_slots, 1] int32 (async)
+    slots: tuple[tuple[int, Any], ...]
+    t0: float
+
+
+class SlotPoolExecutor:
+    """Batched execution engine the continuous-batching scheduler drives."""
+
+    def __init__(self, stepper, n_slots: int, *, overlap: bool = True,
+                 use_fused: bool | str = "auto", metrics=None):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        if not supports_slot_batching(stepper.model):
+            raise NotImplementedError(
+                f"slot batching unsupported for {stepper.model.cfg.name}: "
+                "needs the per-row KV-cache layout (decoder-only, "
+                "non-xLSTM)")
+        self.stepper = stepper
+        self.n_slots = int(n_slots)
+        self.overlap = bool(overlap)
+        self.metrics = metrics
+        self.vstep = VStep(stepper, use_fused=use_fused)
+        self.state = blank_state(stepper, self.n_slots)
+        self.last_toks = jnp.zeros((self.n_slots, 1), jnp.int32)
+        self.active = np.zeros(self.n_slots, bool)
+        self.tags: list[Any] = [None] * self.n_slots
+        self._pending: RoundHandle | None = None
+
+    # ------------------------------------------------------------ slots ----
+    @property
+    def n_active(self) -> int:
+        return int(self.active.sum())
+
+    def admit(self, slot: int, prompt, valid, tag: Any = None) -> int:
+        """Prefill ``prompt`` into ``slot`` (a fresh per-row batch-1 state
+        written over the stacked row — no recompile) and activate it.
+        Returns the first generated token. ``tag`` identifies the occupant
+        in harvested (slot, tag, token) triples."""
+        tokens = np.asarray(prompt, np.int32)[None, :]
+        logits, row = self.stepper.prefill({"tokens": tokens}, valid,
+                                           per_row=True)
+        tok = self.stepper.greedy(logits)                     # [1, 1]
+        self.state = write_slot(self.state, slot, row)
+        self.last_toks = self.last_toks.at[slot].set(tok[0])
+        self.active[slot] = True
+        self.tags[slot] = tag
+        return int(np.asarray(tok)[0, 0])
+
+    def evict(self, slot: int):
+        """Deactivate a slot: its row keeps static shape (and may keep
+        stepping harmlessly until readmission overwrites it)."""
+        self.active[slot] = False
+        self.tags[slot] = None
+
+    def evict_all(self):
+        self.active[:] = False
+        self.tags = [None] * self.n_slots
+
+    def drop_pending(self):
+        """Discard the in-flight round (2MR fallback: its occupants were
+        requeued, their tokens must not be harvested)."""
+        self._pending = None
+
+    # ----------------------------------------------------------- rounds ----
+    def _dispatch(self, valid) -> RoundHandle | None:
+        if not self.active.any():
+            return None
+        new_state, toks, _ = self.vstep.round(self.state, self.last_toks,
+                                              valid)
+        # state/toks advance at DISPATCH order: a later admit() writes its
+        # row into this round's (async) output state, never a stale one.
+        self.state, self.last_toks = new_state, toks
+        occupants = tuple((int(i), self.tags[int(i)])
+                          for i in np.flatnonzero(self.active))
+        return RoundHandle(toks, occupants, time.perf_counter())
+
+    def _harvest(self, handle: RoundHandle | None
+                 ) -> list[tuple[int, Any, int]]:
+        if handle is None:
+            return []
+        jax.block_until_ready(handle.toks)
+        if self.metrics is not None:
+            # dispatch->ready when harvesting synchronously; the pipelined
+            # round period (host work hidden under device time) with overlap
+            self.metrics.observe_round_ms(
+                (time.perf_counter() - handle.t0) * 1e3)
+        arr = np.asarray(handle.toks)
+        return [(s, tag, int(arr[s, 0])) for s, tag in handle.slots]
+
+    def step_round(self, valid) -> list[tuple[int, Any, int]]:
+        """Dispatch one round and return harvested (slot, tag, token)
+        triples — the round just dispatched (overlap off) or the previous
+        one (overlap on; the current round stays in flight while the host
+        works)."""
+        prev, self._pending = self._pending, None
+        self._pending = self._dispatch(valid)
+        if self.overlap:
+            return self._harvest(prev)
+        out = self._harvest(prev) + self._harvest(self._pending)
+        self._pending = None
+        return out

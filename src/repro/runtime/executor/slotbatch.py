@@ -1,0 +1,72 @@
+"""Stack / unstack decode-slot states into one slot-batched pytree.
+
+The scheduler's decode slots used to be independent batch-1 states, stepped
+one `jax.jit` dispatch each. Here they live as ONE stacked pytree whose
+batch axis IS the slot axis: every non-xLSTM decode-state leaf is laid out
+``[L(layers), B(slots), ...]`` (``init_decode_state`` vmaps the per-layer
+init over layers, so layers lead and the batch rides second). With the
+per-row cache layout (``attention.init_cache(per_row=True)``) each row
+carries its own KV length/positions, so rows decode at independent
+positions inside a single dispatch, and slot admission overwrites one row
+in place — same shapes every time, never a recompile.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+# every stacked decode-state leaf is [L, B, ...]: slots live on axis 1
+SLOT_AXIS = 1
+
+
+def supports_slot_batching(model) -> bool:
+    """Slot batching needs the per-row KV-cache layout: decoder-only,
+    non-xLSTM families (enc-dec slots need per-request encoder state and
+    xLSTM carries positionless recurrent block state — see ROADMAP)."""
+    cfg = model.cfg
+    return not cfg.is_encdec and cfg.ssm_kind != "xlstm"
+
+
+def blank_state(stepper, n_slots: int) -> Any:
+    """A fresh stacked per-row decode state with ``n_slots`` rows."""
+    return stepper.model.init_decode(stepper.params, {}, n_slots,
+                                     stepper.max_len, stepper.cache_dtype,
+                                     per_row=True)
+
+
+def stack_states(states: list[Any]) -> Any:
+    """Concatenate batch-1 per-row states along the slot axis."""
+    return jax.tree.map(
+        lambda *xs: jnp.concatenate(xs, axis=SLOT_AXIS), *states)
+
+
+@jax.jit
+def _write_row(stacked, row, idx):
+    return jax.tree.map(
+        lambda s, x: jax.lax.dynamic_update_slice_in_dim(
+            s, x.astype(s.dtype), idx, axis=SLOT_AXIS), stacked, row)
+
+
+def write_slot(stacked: Any, idx, row: Any) -> Any:
+    """Write a (batch-1, per-row) state into slot ``idx`` of the stacked
+    state. ``idx`` is traced, so admission into ANY slot reuses one
+    compiled program — no shape change, no recompile."""
+    return _write_row(stacked, row, jnp.asarray(idx, jnp.int32))
+
+
+@jax.jit
+def _read_row(stacked, idx):
+    return jax.tree.map(
+        lambda s: jax.lax.dynamic_slice_in_dim(s, idx, 1, axis=SLOT_AXIS),
+        stacked)
+
+
+def read_slot(stacked: Any, idx) -> Any:
+    """Slice slot ``idx`` back out as a batch-1 per-row state."""
+    return _read_row(stacked, jnp.asarray(idx, jnp.int32))
+
+
+def unstack_states(stacked: Any, n_slots: int) -> list[Any]:
+    return [read_slot(stacked, i) for i in range(n_slots)]

@@ -1,0 +1,108 @@
+"""One jitted, vectorised decode round over the stacked slot state.
+
+The whole slot pool advances one token in a SINGLE device dispatch: the
+per-row KV positions inside the stacked state let every slot attend at its
+own offset, and the health controller's validity mask is broadcast into
+every coded GEMM of the round, so an in-budget erasure is recovered
+in-step for all slots at once (the paper's close-to-zero recovery, now a
+pool-level property).
+
+Two compiled variants exist, both traced exactly once:
+
+  * reference — the model's coded decode returning full last-position
+    logits (what the equivalence and erasure-sweep tests pin down);
+  * fused     — the model body up to the final norm, then the Pallas
+    fused coded-head kernel (``kernels.cdc_decode``): head GEMM + Eq. 12
+    parity decode + greedy argmax in one kernel, logits never hitting HBM.
+    Valid for <= 1 erased shard (the sum-parity regime); rounds beyond
+    that fall back to the reference path. Off TPU the kernel runs in
+    Pallas interpret mode; ``use_fused="auto"`` therefore enables it only
+    where it compiles natively.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+def _fused_supported(stepper) -> bool:
+    cfg = stepper.model.cfg
+    return (stepper.coded and not cfg.is_encdec
+            and cfg.ssm_kind != "xlstm"
+            and bool(np.allclose(stepper.model.ctx.spec.code.generator[0],
+                                 1.0)))
+
+
+class VStep:
+    """Owns the jitted round functions and their dispatch/trace counters.
+
+    ``n_traces`` increments only when jit actually retraces — the
+    executor tests assert it stays at one per variant while ``n_dispatches``
+    grows with the rounds, i.e. the hot path is one compiled program.
+    """
+
+    def __init__(self, stepper, use_fused: bool | str = "auto"):
+        self.stepper = stepper
+        if use_fused == "auto":
+            use_fused = (_fused_supported(stepper)
+                         and jax.default_backend() == "tpu")
+        self.use_fused = bool(use_fused) and _fused_supported(stepper)
+        self.n_traces = 0
+        self.n_dispatches = 0
+        model = stepper.model
+
+        def _round(params, state, toks, valid):
+            self.n_traces += 1
+            logits, new_state = model.decode(params, state, toks, valid)
+            last = logits[:, -1:]
+            nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+            return new_state, nxt, last
+
+        self._round = jax.jit(_round)
+
+        def _round_fused(params, state, toks, valid, w_shards, parity_w):
+            self.n_traces += 1
+            hidden, new_state = model.decode(params, state, toks, valid,
+                                             return_hidden=True)
+            tok, _ = ops.fused_head_argmax(
+                hidden[:, -1, :].astype(jnp.float32), w_shards, parity_w,
+                valid, vocab=model.cfg.vocab)
+            return new_state, tok[:, None]
+
+        self._round_fused = jax.jit(_round_fused)
+        self._head_cache: tuple[int, Any, Any] | None = None
+
+    # ----------------------------------------------------------- fused ----
+    def _head_shards(self):
+        """[T, k, m_l] column shards + sum-parity weight of the LM head,
+        cached per params object (refreshed by re-encode)."""
+        params = self.stepper.params
+        if self._head_cache is None or self._head_cache[0] != id(params):
+            w = params["lm_head"]["w"]
+            k, m = w.shape
+            t = self.stepper.n_shards
+            w_shards = jnp.moveaxis(w.reshape(k, t, m // t), 1, 0)
+            self._head_cache = (id(params), w_shards, w_shards.sum(0))
+        return self._head_cache[1], self._head_cache[2]
+
+    # ----------------------------------------------------------- rounds ----
+    def round(self, state, toks, valid) -> tuple[Any, jax.Array,
+                                                 jax.Array | None]:
+        """One decode round over the stacked state. valid: [T] bool host
+        mask. Returns (new_state, next_toks [n,1], last_logits or None
+        when the fused head skipped materialising them)."""
+        st = self.stepper
+        v = st._mask(valid) if st.coded else None
+        self.n_dispatches += 1
+        if self.use_fused and v is not None \
+                and int(st.n_shards - np.asarray(valid).sum()) <= 1:
+            w_shards, parity_w = self._head_shards()
+            new_state, nxt = self._round_fused(st.params, state, toks, v,
+                                               w_shards, parity_w)
+            return new_state, nxt, None
+        return self._round(st.params, state, toks, v)

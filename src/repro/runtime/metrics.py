@@ -16,6 +16,7 @@ _COUNTERS = (
     "requests_admitted",
     "requests_completed",
     "requests_requeued",
+    "requests_shed",
     "decode_rounds",
     "tokens_generated",
     "erasures_recovered",
@@ -30,6 +31,7 @@ class RuntimeMetrics:
         self.counters: dict[str, int] = {k: 0 for k in _COUNTERS}
         self.latencies_ms: list[float] = []
         self.queueing_ms: list[float] = []
+        self.round_ms: list[float] = []       # MEASURED wall-clock rounds
         self.queue_depth: list[tuple[float, int]] = []   # (t_ms, depth)
         self.start_ms: float | None = None
         self.end_ms: float | None = None
@@ -41,6 +43,13 @@ class RuntimeMetrics:
     def observe_request(self, latency_ms: float, queueing_ms: float):
         self.latencies_ms.append(float(latency_ms))
         self.queueing_ms.append(float(queueing_ms))
+
+    def observe_round_ms(self, wall_ms: float):
+        """Measured wall-clock time of one decode round (dispatch->ready,
+        or the pipelined round period under executor overlap) — the
+        real-hardware series reported alongside the modelled
+        StragglerModel numbers that drive the simulated clock."""
+        self.round_ms.append(float(wall_ms))
 
     def sample_queue_depth(self, t_ms: float, depth: int):
         self.queue_depth.append((float(t_ms), int(depth)))
@@ -84,6 +93,7 @@ class RuntimeMetrics:
             },
             "request_latency": self._dist(self.latencies_ms),
             "queueing_delay": self._dist(self.queueing_ms),
+            "round_latency_measured": self._dist(self.round_ms),
             "queue_depth": {
                 "samples": len(depths),
                 "mean": float(np.mean(depths)) if depths else 0.0,

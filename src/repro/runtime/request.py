@@ -17,6 +17,7 @@ class RequestState(enum.Enum):
     QUEUED = "queued"
     RUNNING = "running"
     COMPLETED = "completed"
+    SHED = "shed"                       # dropped by the queue-depth bound
 
 
 @dataclasses.dataclass
@@ -25,6 +26,8 @@ class Request:
     prompt: np.ndarray                  # [prompt_len] int32 token ids
     max_new_tokens: int
     arrival_ms: float = 0.0
+    deadline_ms: float | None = None    # SLO deadline (None = best effort)
+    priority: int = 0                   # higher pops first
 
     # -- mutated by the scheduler ------------------------------------------
     state: RequestState = RequestState.QUEUED

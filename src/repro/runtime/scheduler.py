@@ -4,27 +4,35 @@ The paper's serving claims are single-request statements ("never loses a
 request", close-to-zero recovery). This scheduler turns them into
 steady-state properties of a request STREAM:
 
-  * a FIFO admission queue feeds ``n_slots`` decode slots; a slot (its
-    [1, max_len] KV-cache allocation) is reused by the next queued request
-    the moment its occupant finishes — continuous batching, no
-    wait-for-the-whole-batch barrier;
+  * a deadline-aware admission queue (FIFO when no deadlines/priorities
+    are set) feeds ``n_slots`` decode slots; a slot (its [1, max_len]
+    KV-cache row) is reused by the next queued request the moment its
+    occupant finishes — continuous batching, no wait-for-the-whole-batch
+    barrier. A configurable queue-depth bound sheds the worst-ordered
+    request instead of queueing without bound;
   * every decode round consults the ``ShardHealthController``: within the
     erasure budget the round proceeds with the flipped validity mask and
     the coded GEMMs reconstruct the lost shard in-step (CDC half of the
     §6.3 hybrid); beyond budget, in-flight requests are requeued, the
     standby replica is swapped in, and parity is re-encoded offline (2MR
-    half) — the request stream drains either way, so no request is lost;
+    half) — the request stream drains either way, so no admitted request
+    is lost;
   * time comes from an injected clock. Tests use a deterministic
     ``SimClock`` advanced by a fixed per-round latency; benchmarks sample
-    round latency from the paper's first-T-of-(T+r) straggler model.
+    round latency from the paper's first-T-of-(T+r) straggler model. The
+    MEASURED wall-clock latency of every real round is recorded alongside
+    (``RuntimeMetrics.round_ms``).
 
-Decode slots hold independent batch-1 states over ONE jitted step
-function, so admission and completion never force a recompile and a
-mid-stream erasure needs no re-dispatch.
+Execution: by default the slot pool lives in a ``SlotPoolExecutor`` — one
+stacked state with per-slot KV positions, ONE jitted dispatch per round
+for the whole pool, optional host/device overlap. Models without the
+per-row cache layout (enc-dec, xLSTM) or ``batched=False`` fall back to
+the original sequential per-slot stepping over batch-1 states.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Any
 
@@ -32,8 +40,11 @@ import numpy as np
 
 from repro.core.failure import StragglerModel, request_latency
 from repro.runtime.clock import Clock, SimClock
+from repro.runtime.executor import (SlotPoolExecutor,
+                                    supports_slot_batching)
 from repro.runtime.health import HealthAction, ShardHealthController
 from repro.runtime.metrics import RuntimeMetrics
+from repro.runtime.queue import AdmissionQueue
 from repro.runtime.request import Request, RequestState
 from repro.serve.engine import ModelStepper
 
@@ -46,6 +57,10 @@ class RuntimeConfig:
     seed: int = 0
     max_requeues: int = 8            # liveness guard for event storms
     max_rounds: int = 100_000
+    batched: bool | None = None      # None: auto (batched when supported)
+    overlap: bool = True             # pipeline host work with device rounds
+    use_fused: bool | str = "auto"   # Pallas fused head in the round
+    max_queue_depth: int | None = None   # shed beyond this depth
 
     def __post_init__(self):
         if self.n_slots < 1:
@@ -54,13 +69,15 @@ class RuntimeConfig:
             raise ValueError("step_time_ms must be >= 0")
         if self.max_requeues < 0 or self.max_rounds < 1:
             raise ValueError("max_requeues/max_rounds out of range")
+        if self.max_queue_depth is not None and self.max_queue_depth < 1:
+            raise ValueError("max_queue_depth must be >= 1")
 
 
 @dataclasses.dataclass
 class _Slot:
     idx: int
     request: Request | None = None
-    state: Any = None                # the slot's decode/KV state (batch=1)
+    state: Any = None                # sequential path: batch-1 decode state
     last_tok: Any = None
     occupancies: int = 0
 
@@ -80,26 +97,45 @@ class ContinuousBatchingScheduler:
         self.health = health if health is not None else ShardHealthController(
             stepper.n_shards, stepper.erasure_budget)
         self.metrics = metrics if metrics is not None else RuntimeMetrics()
-        self.queue: deque[Request] = deque()
+        self.queue = AdmissionQueue(max_depth=rcfg.max_queue_depth)
         self.slots = [_Slot(i) for i in range(rcfg.n_slots)]
         self.completed: list[Request] = []
+        self.shed: list[Request] = []
         self._rng = np.random.default_rng(rcfg.seed)
         self._next_rid = 0
 
+        batched = rcfg.batched
+        if batched is None:
+            batched = supports_slot_batching(stepper.model)
+        self.executor: SlotPoolExecutor | None = None
+        if batched:
+            self.executor = SlotPoolExecutor(
+                stepper, rcfg.n_slots, overlap=rcfg.overlap,
+                use_fused=rcfg.use_fused, metrics=self.metrics)
+
     # --------------------------------------------------------- ingestion ----
     def submit(self, prompt, max_new_tokens: int,
-               arrival_ms: float | None = None) -> Request:
+               arrival_ms: float | None = None,
+               deadline_ms: float | None = None,
+               priority: int = 0) -> Request:
         """Enqueue a request. ``arrival_ms`` lets timed workloads record
         the TRUE arrival instant even when submission happens at the next
         round boundary (latency then includes the sub-round wait); it must
-        not lie in the future."""
+        not lie in the future. ``deadline_ms``/``priority`` bend the
+        admission order (earliest deadline / highest priority first); a
+        full queue sheds the worst-ordered request."""
         now = self.clock.now()
         arrival = now if arrival_ms is None else min(float(arrival_ms), now)
         req = Request(self._next_rid, np.asarray(prompt, np.int32),
-                      int(max_new_tokens), arrival_ms=arrival)
+                      int(max_new_tokens), arrival_ms=arrival,
+                      deadline_ms=deadline_ms, priority=priority)
         self._next_rid += 1
-        self.queue.append(req)
         self.metrics.count("requests_submitted")
+        victim = self.queue.push(req)
+        if victim is not None:
+            victim.state = RequestState.SHED
+            self.shed.append(victim)
+            self.metrics.count("requests_shed")
         self.metrics.sample_queue_depth(self.clock.now(), len(self.queue))
         return req
 
@@ -128,8 +164,13 @@ class ContinuousBatchingScheduler:
 
     def _requeue_inflight(self):
         """2MR fallback: drain slots, swap the standby replica in, re-encode
-        parity. Requests keep their original arrival order."""
+        parity. Requests keep their original arrival order; shedding never
+        applies to in-flight work."""
         self.metrics.count("beyond_budget_failures")
+        if self.executor is not None:
+            # in-flight round (if any) was computed for requeued occupants
+            self.executor.drop_pending()
+            self.executor.evict_all()
         victims = []
         for slot in self.slots:
             if slot.free:
@@ -143,9 +184,8 @@ class ContinuousBatchingScheduler:
             req.reset_for_requeue()
             victims.append(req)
             slot.request, slot.state, slot.last_tok = None, None, None
-        for req in sorted(victims, key=lambda r: (r.arrival_ms, r.rid),
-                          reverse=True):
-            self.queue.appendleft(req)
+        for req in victims:
+            self.queue.push(req, force=True)
         self.metrics.count("requests_requeued", len(victims))
         healed = self.health.replace_replica()
         self.metrics.count("shards_healed", healed)
@@ -154,20 +194,27 @@ class ContinuousBatchingScheduler:
 
     # --------------------------------------------------------- admission ----
     def _admit(self):
+        mask = self.health.mask
         for slot in self.slots:
             if not slot.free or not self.queue:
                 continue
-            req = self.queue.popleft()
+            req = self.queue.pop()
             now = self.clock.now()
             req.state = RequestState.RUNNING
             req.slot = slot.idx
             req.admitted_ms = now
-            batch = {"tokens": req.prompt[None, :]}
-            logits, state = self.stepper.prefill(batch, self.health.mask)
-            tok = self.stepper.greedy(logits)
-            slot.request, slot.state, slot.last_tok = req, state, tok
+            if self.executor is not None:
+                tok = self.executor.admit(slot.idx, req.prompt, mask,
+                                          tag=req.rid)
+                slot.request = req
+            else:
+                batch = {"tokens": req.prompt[None, :]}
+                logits, state = self.stepper.prefill(batch, mask)
+                t = self.stepper.greedy(logits)
+                slot.request, slot.state, slot.last_tok = req, state, t
+                tok = int(np.asarray(t)[0, 0])
             slot.occupancies += 1
-            req.tokens.append(int(np.asarray(tok)[0, 0]))
+            req.tokens.append(tok)
             self.metrics.count("requests_admitted")
             self.metrics.count("tokens_generated")
             if req.done:
@@ -180,19 +227,52 @@ class ContinuousBatchingScheduler:
         self.completed.append(req)
         self.metrics.count("requests_completed")
         self.metrics.observe_request(req.latency_ms, req.queueing_ms)
-        # the slot (and its KV allocation) is immediately reusable
+        # the slot (and its KV-cache row) is immediately reusable
         slot.request, slot.state, slot.last_tok = None, None, None
+        if self.executor is not None:
+            self.executor.evict(slot.idx)
 
     # -------------------------------------------------------------- step ----
     def step(self) -> list[Request]:
         """One decode round: apply due health events, admit into free slots,
-        decode one token per occupied slot, advance the clock."""
+        decode one token per occupied slot — one jitted dispatch for the
+        whole pool on the batched path — and advance the clock."""
         self.metrics.mark(self.clock.now())
         self._handle_health()
         self._admit()
 
+        if self.executor is not None:
+            finished = self._step_batched()
+        else:
+            finished = self._step_sequential()
+
+        self.metrics.count("decode_rounds")
+        self._advance_clock()
+        self.metrics.sample_queue_depth(self.clock.now(), len(self.queue))
+        self.metrics.mark(self.clock.now())
+        return finished
+
+    def _step_batched(self) -> list[Request]:
+        finished: list[Request] = []
+        ready = self.executor.step_round(self.health.mask)
+        for slot_idx, rid, tok in ready:
+            slot = self.slots[slot_idx]
+            # stale harvest: occupant changed (completed/requeued) between
+            # dispatch and harvest, or already hit its token budget
+            if slot.free or slot.request.rid != rid or slot.request.done:
+                continue
+            slot.request.tokens.append(tok)
+            self.metrics.count("tokens_generated")
+            if slot.request.done:
+                finished.append(slot.request)
+                self._complete(slot)
+        return finished
+
+    def _step_sequential(self) -> list[Request]:
         finished: list[Request] = []
         mask = self.health.mask
+        t0 = time.perf_counter()
+        stepped = False
         for slot in self.slots:
             if slot.free or slot.request.done:
                 continue
@@ -200,15 +280,15 @@ class ContinuousBatchingScheduler:
                 slot.state, slot.last_tok, mask)
             slot.last_tok = self.stepper.greedy(logits)
             slot.request.tokens.append(int(np.asarray(slot.last_tok)[0, 0]))
+            stepped = True
             self.metrics.count("tokens_generated")
             if slot.request.done:
                 finished.append(slot.request)
                 self._complete(slot)
-
-        self.metrics.count("decode_rounds")
-        self._advance_clock()
-        self.metrics.sample_queue_depth(self.clock.now(), len(self.queue))
-        self.metrics.mark(self.clock.now())
+        if stepped:
+            # np.asarray above synced every dispatch: this is the real
+            # n-dispatch round latency the batched path collapses
+            self.metrics.observe_round_ms((time.perf_counter() - t0) * 1e3)
         return finished
 
     def _advance_clock(self):

@@ -78,13 +78,19 @@ class ModelStepper:
         return jnp.asarray(np.asarray(valid, bool))
 
     # ---------------------------------------------------------- stepping ----
-    def prefill(self, batch: dict, valid=None) -> tuple[jax.Array, Any]:
+    def prefill(self, batch: dict, valid=None,
+                per_row: bool = False) -> tuple[jax.Array, Any]:
         """Run the prompt through the decode path, filling a fresh slot
-        state. Returns (last-position logits [b, 1, V], state)."""
+        state. Returns (last-position logits [b, 1, V], state).
+
+        per_row=True builds the slot-batched cache layout (per-row position
+        vectors) so the state can be written into a stacked executor batch.
+        """
         v = self._mask(valid) if self.coded else None
         b = batch["tokens"].shape[0]
         state = self.model.init_decode(self.params, batch, b, self.max_len,
-                                       self.cache_dtype, valid=v)
+                                       self.cache_dtype, valid=v,
+                                       per_row=per_row)
         logits, state = self._decode(self.params, state, batch["tokens"], v)
         return logits[:, -1:], state
 
@@ -124,6 +130,12 @@ class ServingEngine:
     One batch at a time, caller-managed failure injection. New code should
     use ``repro.runtime.ContinuousBatchingScheduler``, which drives the
     same stepper under sustained load with a shard-health controller.
+
+    ``generate`` DELEGATES to the batched ``SlotPoolExecutor`` (every
+    batch row becomes a slot, rounds are one dispatch) so this deprecated
+    entry point exercises the exact same hot path as the runtime and
+    cannot silently diverge from it; models without the per-row cache
+    layout (enc-dec, xLSTM) fall back to the sequential stepper loop.
     """
 
     def __init__(self, model: Model, params, scfg: ServeConfig):
@@ -134,6 +146,7 @@ class ServingEngine:
         self.valid = jnp.ones(self.stepper.n_shards, bool)
         self.metrics = {"requests": 0, "erasures_recovered": 0,
                         "requeued": 0}
+        self._executors: dict[int, Any] = {}   # batch size -> warm executor
 
     @property
     def params(self):
@@ -161,6 +174,35 @@ class ServingEngine:
                  fail_at: dict[int, int] | None = None) -> np.ndarray:
         """Greedy generation; ``fail_at`` maps step -> shard to kill mid-
         request (the paper's Case Study II: performance unchanged)."""
+        # deferred import: repro.runtime imports this module for the stepper
+        from repro.runtime.executor import (SlotPoolExecutor,
+                                            supports_slot_batching)
+        if not supports_slot_batching(self.model):
+            return self._generate_sequential(batch, n_tokens, fail_at)
+        tokens = np.asarray(batch["tokens"])
+        b = tokens.shape[0]
+        ex = self._executors.get(b)
+        if ex is None:
+            ex = SlotPoolExecutor(self.stepper, n_slots=b, overlap=False)
+            self._executors[b] = ex
+        else:
+            # reuse the warm jit cache; admission overwrites every row
+            ex.drop_pending()
+            ex.evict_all()
+        out = np.zeros((b, n_tokens), np.int64)
+        for i in range(b):
+            out[i, 0] = ex.admit(i, tokens[i], self.valid, tag=i)
+        for t in range(n_tokens - 1):
+            if fail_at and t in fail_at:
+                self.inject_failure(fail_at[t])
+            for slot, _, tok in ex.step_round(self.valid):
+                out[slot, t + 1] = tok
+        self.metrics["requests"] += b
+        return out
+
+    def _generate_sequential(self, batch: dict, n_tokens: int,
+                             fail_at: dict[int, int] | None) -> np.ndarray:
+        """Sequential fallback for families the executor can't slot-batch."""
         logits, state = self.prefill(batch)
         tok = self.stepper.greedy(logits)
         out = [tok]

@@ -122,7 +122,9 @@ def test_recovery_event_heals_and_reencodes(coded):
 
 
 def test_deterministic_clock_repeatability(coded):
-    """Same workload + SimClock twice => bit-identical metrics."""
+    """Same workload + SimClock twice => bit-identical tokens and
+    simulated metrics. The MEASURED wall-clock round series is real
+    hardware time and only repeats in count, not values."""
     cfg, stepper = coded
     prompts = _prompts(cfg, 3)
 
@@ -135,6 +137,9 @@ def test_deterministic_clock_repeatability(coded):
     toks_a, snap_a = once()
     toks_b, snap_b = once()
     assert toks_a == toks_b
+    meas_a = snap_a.pop("round_latency_measured")
+    meas_b = snap_b.pop("round_latency_measured")
+    assert meas_a["n"] == meas_b["n"] > 0
     assert snap_a == snap_b
 
 
