@@ -1,0 +1,255 @@
+"""Chaos resilience benchmark: the paper's headline robustness claims
+under *injected* faults instead of hand-placed ones (``repro.faults``).
+
+Three sections, written to ``BENCH_chaos.json`` (repo root):
+
+  1. ``churn`` — a deterministic in-budget churn trace (single-shard
+     outages rotating over the device set) drives the coded runtime: it
+     must complete 100% of requests with tokens IDENTICAL to the
+     fault-free run and zero beyond-budget failures (CDC recovers every
+     erasure in-step). The uncoded baseline under the same trace survives
+     only via the 2MR requeue path — every outage costs requeued work.
+  2. ``parity_cost`` — the paper's §6.3/Fig. 17 economics as a sweep over
+     device count N: CDC covers a whole coded layer with r extra parity
+     devices (CONSTANT in N) while 2MR duplicates every device (LINEAR),
+     cross-checked with the adaptive planner's required budget at a fixed
+     per-device unavailability.
+  3. ``adaptive`` — one run through calm -> fault-storm -> calm phases:
+     the adaptive redundancy planner must RAISE r when concurrent
+     failures exceed the current budget and LOWER it again after the
+     storm (cooldown), with every request still completing.
+
+Run:  PYTHONPATH=src python benchmarks/chaos_resilience.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch, smoke_config
+from repro.core.failure import StragglerModel, coverage_2mr
+from repro.faults import (AdaptiveRedundancyPlanner, InjectedLatency,
+                          LatencySpec, PlannerConfig, TraceInjector,
+                          attach_chaos, attach_planner, churn_trace,
+                          required_budget)
+from repro.models import TPCtx, build
+from repro.runtime import (ContinuousBatchingScheduler, RuntimeConfig,
+                           ShardHealthController, run_arrivals)
+from repro.serve import ModelStepper
+
+DEFAULTS = dict(tp=4, code_r=2, n_slots=4, prompt_len=8, gen_tokens=6,
+                n_requests=12, seed=0)
+
+
+def _build_stepper(cfg, tp: int, code_r: int, coded: bool, max_len: int):
+    ctx = TPCtx(tp=tp, mode="coded" if coded else "plain", code_r=code_r,
+                moe_capacity=0)
+    model = build(cfg, ctx)
+    params = model.init(jax.random.PRNGKey(0))
+    return ModelStepper(model, params, max_len=max_len)
+
+
+def _workload(cfg, n_requests: int, prompt_len: int, gen_tokens: int,
+              span_ms: float, seed: int):
+    rng = np.random.default_rng(seed)
+    gaps = span_ms / max(n_requests, 1)
+    return [(i * gaps, rng.integers(0, cfg.vocab, prompt_len), gen_tokens)
+            for i in range(n_requests)]
+
+
+def _run(stepper, workload, trace, *, seed: int, adapt: bool = False,
+         plan_window_ms: float = 200.0, max_budget: int = 2) -> dict:
+    injector = TraceInjector(trace, stepper.n_shards) if trace else None
+    latency = InjectedLatency(LatencySpec(), injector, seed=seed) \
+        if injector is not None else None
+    health = ShardHealthController(stepper.n_shards, stepper.erasure_budget)
+    sched = ContinuousBatchingScheduler(
+        stepper, RuntimeConfig(n_slots=DEFAULTS["n_slots"],
+                               straggler=StragglerModel(), seed=seed),
+        health=health, latency=latency)
+    if injector is not None:
+        attach_chaos(sched, injector)
+    if adapt:
+        planner = AdaptiveRedundancyPlanner(
+            PlannerConfig(window_ms=plan_window_ms, max_budget=max_budget),
+            stepper.n_shards, layout=stepper.model.ctx.code_layout)
+        attach_planner(sched, planner)
+    completed = run_arrivals(sched, workload)
+    snap = sched.metrics.snapshot()
+    return {
+        "completed_all": (snap["counters"]["requests_completed"]
+                          == snap["counters"]["requests_submitted"]
+                          == len(workload)),
+        "tokens": {r.rid: list(r.tokens) for r in completed},
+        "counters": snap["counters"],
+        "planner": snap["planner"],
+        "elapsed_ms": snap["elapsed_ms"],
+        "request_latency": snap["request_latency"],
+    }
+
+
+# ------------------------------------------------------------- sections ----
+
+def churn_section(cfg, args) -> dict:
+    """In-budget churn: coded completes everything with identical tokens;
+    uncoded survives the same trace only through 2MR requeues."""
+    max_len = args.prompt_len + args.gen_tokens + 8
+    span = 1200.0
+    workload = _workload(cfg, args.n_requests, args.prompt_len,
+                         args.gen_tokens, span, args.seed)
+    trace = churn_trace(args.tp, 100.0, span, period_ms=300.0,
+                        down_ms=120.0, concurrent=1)
+
+    coded = _build_stepper(cfg, args.tp, args.code_r, True, max_len)
+    baseline = _run(coded, workload, None, seed=args.seed)
+    faulty = _run(coded, workload, trace, seed=args.seed)
+    uncoded = _build_stepper(cfg, args.tp, args.code_r, False, max_len)
+    uncoded_faulty = _run(uncoded, workload, trace, seed=args.seed)
+
+    out = {
+        "trace_events": len(trace),
+        "coded": {k: faulty[k] for k in
+                  ("completed_all", "counters", "request_latency")},
+        "coded_tokens_match_fault_free":
+            faulty["tokens"] == baseline["tokens"],
+        "uncoded": {k: uncoded_faulty[k] for k in
+                    ("completed_all", "counters", "request_latency")},
+    }
+    assert out["coded"]["completed_all"], "coded runtime lost a request"
+    assert out["coded_tokens_match_fault_free"], \
+        "in-budget churn changed generated tokens"
+    assert faulty["counters"]["beyond_budget_failures"] == 0
+    assert uncoded_faulty["counters"]["requests_requeued"] > 0, \
+        "uncoded baseline should pay the 2MR requeue path"
+    return out
+
+
+def parity_cost_section(device_counts, unavail: float = 0.02,
+                        target: float = 0.999) -> dict:
+    """CDC parity cost flat in N; 2MR linear (paper Fig. 17)."""
+    rows = []
+    for n in device_counts:
+        cov = coverage_2mr(n, 0)
+        b = required_budget(n, unavail, target, b_max=4)
+        rows.append({
+            "devices": n,
+            "extra_cdc": cov["extra_cdc_2mr"],     # 1 parity device
+            "extra_2mr": cov["extra_2mr"],         # duplicate everything
+            "hw_cost_cdc": cov["hw_cost_cdc_2mr"],
+            "hw_cost_2mr": cov["hw_cost_2mr"],
+            "planner_budget": b,
+        })
+    flat = len({r["extra_cdc"] for r in rows}) == 1
+    linear = all(r["extra_2mr"] == r["devices"] for r in rows)
+    assert flat and linear, rows
+    return {"unavailability": unavail, "target": target, "rows": rows,
+            "cdc_cost_flat_in_devices": flat,
+            "mr2_cost_linear_in_devices": linear}
+
+
+def adaptive_section(cfg, args) -> dict:
+    """Calm -> storm -> calm: the planner raises r for the storm and
+    lowers it again afterwards; no request is lost."""
+    max_len = args.prompt_len + args.gen_tokens + 8
+    calm, storm_end, end = 800.0, 2400.0, 4200.0
+    # storm: waves of 2 concurrent outages — beyond the initial r=2
+    # folded budget of 1, so the planner must raise r to keep CDC coverage
+    trace = churn_trace(args.tp, calm, storm_end, period_ms=300.0,
+                        down_ms=120.0, concurrent=2)
+    workload = _workload(cfg, 2 * args.n_requests, args.prompt_len,
+                         args.gen_tokens, end - 400.0, args.seed)
+    stepper = _build_stepper(cfg, args.tp, args.code_r, True, max_len)
+    res = _run(stepper, workload, trace, seed=args.seed, adapt=True,
+               plan_window_ms=250.0)
+    series = res["planner"]["r_series"]
+    rs = [r for _, r in series]
+    out = {
+        "phases": {"calm_until_ms": calm, "storm_until_ms": storm_end},
+        "completed_all": res["completed_all"],
+        "r_series": series,
+        "replans": res["counters"]["replans"],
+        "raised_during_storm": max(rs) > rs[0] if series else False,
+        "lowered_after_storm": rs[-1] < max(rs) if series else False,
+        "final_code_r": int(stepper.model.ctx.code_r),
+        "max_observed_concurrent": max(
+            (p["window_max_dead"] for p in res["planner"]["plans"]),
+            default=0),
+        "max_planned_budget": max(
+            (p["budget"] for p in res["planner"]["plans"]), default=0),
+        "counters": res["counters"],
+    }
+    assert out["completed_all"], "adaptive run lost a request"
+    assert out["raised_during_storm"], f"planner never raised r: {series}"
+    assert out["lowered_after_storm"], f"planner never lowered r: {series}"
+    return out
+
+
+# ----------------------------------------------------------------- main ----
+
+def build_report(args) -> dict:
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    return {
+        "bench": "chaos_resilience",
+        "workload": {"arch": args.arch, "smoke": args.smoke,
+                     **{k: getattr(args, k) for k in DEFAULTS}},
+        "churn": churn_section(cfg, args),
+        "parity_cost": parity_cost_section(args.device_counts),
+        "adaptive": adaptive_section(cfg, args),
+    }
+
+
+def run() -> list[dict]:
+    """benchmarks.run entry: smoke-scale rows."""
+    args = _parse([])
+    args.smoke = True
+    rep = build_report(args)
+    rows = [{"section": "churn",
+             "completed_all": rep["churn"]["coded"]["completed_all"],
+             "tokens_match": rep["churn"]["coded_tokens_match_fault_free"],
+             "uncoded_requeues":
+                 rep["churn"]["uncoded"]["counters"]["requests_requeued"]}]
+    rows += [{"section": "parity_cost", **r}
+             for r in rep["parity_cost"]["rows"]]
+    rows.append({"section": "adaptive",
+                 "r_series": rep["adaptive"]["r_series"],
+                 "raised": rep["adaptive"]["raised_during_storm"],
+                 "lowered": rep["adaptive"]["lowered_after_storm"]})
+    return rows
+
+
+def _parse(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b")
+    ap.add_argument("--smoke", action="store_true")
+    for key, val in DEFAULTS.items():
+        ap.add_argument(f"--{key.replace('_', '-')}", type=type(val),
+                        default=val)
+    ap.add_argument("--device-counts", type=int, nargs="+",
+                    default=[4, 8, 12, 16])
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--bench-out", default="BENCH_chaos.json",
+                    help="headline report path ('' disables)")
+    return ap.parse_args(argv)
+
+
+def main():
+    args = _parse()
+    report = build_report(args)
+    print(json.dumps(report, indent=2, sort_keys=True, default=str))
+    if args.out:
+        import os
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True, default=str)
+    if args.bench_out:
+        with open(args.bench_out, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True, default=str)
+
+
+if __name__ == "__main__":
+    main()

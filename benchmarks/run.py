@@ -1,16 +1,25 @@
 """Benchmark harness: one module per paper table/figure (+ framework perf).
 
 Prints ``name,us_per_call,derived`` CSV per row and dumps the full records
-to results/bench.json.
+to results/bench.json. The default set is the fast model-free suites;
+``--all`` adds the serving benchmarks that build and drive real models
+through the coded runtime (``serve_throughput``, ``chaos_resilience``).
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--all", action="store_true",
+                    help="include the runtime serving benchmarks "
+                         "(serve_throughput, chaos_resilience)")
+    args = ap.parse_args()
+
     from benchmarks import (coded_overhead, fig2_data_loss, fig12_recovery,
                             fig16_straggler, fig17_coverage, multi_failure,
                             roofline_table, tab1_suitability)
@@ -26,6 +35,12 @@ def main() -> None:
         ("multi_failure", multi_failure.run),
         ("roofline_table", roofline_table.run),
     ]
+    if args.all:
+        from benchmarks import chaos_resilience, serve_throughput
+        suites += [
+            ("serve_throughput", serve_throughput.run),
+            ("chaos_resilience", chaos_resilience.run),
+        ]
 
     all_results = {}
     print("name,us_per_call,derived")

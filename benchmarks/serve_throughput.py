@@ -114,6 +114,30 @@ def executor_comparison(cfg, workload, common: dict) -> dict:
     return out
 
 
+def run() -> list[dict]:
+    """``benchmarks.run --all`` entry: smoke-scale coded vs uncoded rows
+    (Poisson load, mid-run erasure, coded must complete 100%)."""
+    cfg = smoke_config(get_arch("granite-3-8b"))
+    rng = np.random.default_rng(0)
+    workload = make_workload(rng, 8, 25.0, 8, 4, cfg.vocab)
+    common = dict(tp=4, code_r=2, n_slots=4,
+                  fail_time_ms=workload[len(workload) // 2][0],
+                  fail_shard=1, straggler=StragglerModel(), seed=0)
+    rows = []
+    for coded in (True, False):
+        snap = run_mode(cfg, workload, coded=coded, **common)
+        rows.append({
+            "mode": snap["mode"],
+            "executor": snap["executor"],
+            "completed_all": snap["completed_all"],
+            "requests_requeued": snap["counters"]["requests_requeued"],
+            "p99_latency_ms": snap["request_latency"].get("p99_ms"),
+            "rounds_per_s": snap["rounds_per_s"],
+        })
+    assert rows[0]["completed_all"], "coded runtime lost a request"
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-8b")

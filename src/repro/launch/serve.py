@@ -15,6 +15,18 @@ requeues and heals.
 and ``--max-queue-depth`` exercise the SLO admission queue. ``--legacy``
 runs the old one-batch-at-a-time ServingEngine path with the original
 --fail-step semantics.
+
+Chaos mode (``repro.faults``): ``--chaos <spec|trace>`` drives the health
+controller with a seeded churn process (e.g.
+``--chaos "weibull:mtbf=2000,mttr=120"`` — scale MTBF against the ~50 ms
+modelled round floor) or a JSONL trace file, with the modelled round
+latency following the same fault schedule; ``--adapt-r`` closes the loop
+with the adaptive redundancy planner (re-sizes r through heal + parity
+re-encode to hold ``--avail-target``). ``--seed`` is the root seed: the
+whole chaos run replays bit-exact.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b --smoke \\
+      --coded --chaos "exp:mtbf=800,mttr=120" --adapt-r
 """
 from __future__ import annotations
 
@@ -26,6 +38,9 @@ import numpy as np
 
 from repro.configs import get_arch, smoke_config
 from repro.core.failure import StragglerModel
+from repro.faults import (AdaptiveRedundancyPlanner, InjectedLatency,
+                          LatencySpec, PlannerConfig, attach_chaos,
+                          attach_planner, measured_stall_hook, parse_chaos)
 from repro.models import TPCtx, build
 from repro.runtime import (ContinuousBatchingScheduler, RuntimeConfig,
                            ShardHealthController, erasure, run_arrivals)
@@ -77,6 +92,22 @@ def main():
                     help="per-request SLO deadline after arrival")
     ap.add_argument("--max-queue-depth", type=int, default=None,
                     help="shed requests beyond this queue depth")
+    ap.add_argument("--chaos", default=None, metavar="SPEC|TRACE",
+                    help="fault injection: churn spec "
+                         "('weibull:mtbf=2000,mttr=120,groups=2,"
+                         "burst_mtbf=4000') or a JSONL trace path")
+    ap.add_argument("--adapt-r", action="store_true",
+                    help="adaptive redundancy planner: re-size r from "
+                         "observed failures (heal + parity re-encode)")
+    ap.add_argument("--avail-target", type=float, default=0.999,
+                    help="planner availability target")
+    ap.add_argument("--plan-window-ms", type=float, default=300.0,
+                    help="planner estimation window (sim time; several "
+                         "decode rounds, ~50 ms each under the default "
+                         "straggler floor)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="root seed: stragglers, injector, and injected "
+                         "latency all derive from it (bit-exact replay)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -99,8 +130,25 @@ def main():
                          batched=False if args.sequential else None,
                          overlap=not args.no_overlap,
                          use_fused=True if args.fused else "auto",
-                         max_queue_depth=args.max_queue_depth)
-    sched = ContinuousBatchingScheduler(stepper, rcfg, health=health)
+                         max_queue_depth=args.max_queue_depth,
+                         seed=args.seed)
+    injector = latency = None
+    if args.chaos:
+        injector = parse_chaos(args.chaos, stepper.n_shards, seed=args.seed)
+        latency = InjectedLatency(LatencySpec(), injector, seed=args.seed)
+    sched = ContinuousBatchingScheduler(stepper, rcfg, health=health,
+                                        latency=latency)
+    if injector is not None:
+        attach_chaos(sched, injector)
+        if sched.executor is not None:
+            sched.executor.round_hooks.append(measured_stall_hook(latency))
+    if args.adapt_r:
+        planner = AdaptiveRedundancyPlanner(
+            PlannerConfig(target_availability=args.avail_target,
+                          window_ms=args.plan_window_ms),
+            stepper.n_shards, layout=model.ctx.code_layout,
+            suitable=stepper.erasure_budget > 0 or not args.coded)
+        attach_planner(sched, planner)
     rng = np.random.default_rng(1)
     if args.deadline_ms is not None:
         arrivals = []
@@ -124,6 +172,15 @@ def main():
     if sched.executor is not None:
         print(f"executor: {sched.executor.vstep.n_dispatches} round "
               f"dispatches, {sched.executor.vstep.n_traces} trace(s)")
+    if injector is not None:
+        c = sched.metrics.counters
+        print(f"chaos: {c['faults_injected']} injected events, "
+              f"{c['erasures_recovered']} recovered in-step, "
+              f"{c['beyond_budget_failures']} beyond budget")
+    if args.adapt_r and sched.metrics.plan_log:
+        series = [(p["t_ms"], p["r"]) for p in sched.metrics.plan_log]
+        print(f"planner: r series {series} "
+              f"(replans: {sched.metrics.counters['replans']})")
     print(sched.metrics.to_json())
     if args.coded:
         print("straggler model (first-T-of-T+r):",

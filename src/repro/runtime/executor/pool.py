@@ -68,6 +68,10 @@ class SlotPoolExecutor:
         self.active = np.zeros(self.n_slots, bool)
         self.tags: list[Any] = [None] * self.n_slots
         self._pending: RoundHandle | None = None
+        # per-round injection hook point: fn(executor, valid) runs on the
+        # host right before each dispatch (chaos harness: replay modelled
+        # stalls into the MEASURED round series)
+        self.round_hooks: list[Any] = []
 
     # ------------------------------------------------------------ slots ----
     @property
@@ -108,6 +112,8 @@ class SlotPoolExecutor:
     def _dispatch(self, valid) -> RoundHandle | None:
         if not self.active.any():
             return None
+        for hook in self.round_hooks:
+            hook(self, valid)
         new_state, toks, _ = self.vstep.round(self.state, self.last_toks,
                                               valid)
         # state/toks advance at DISPATCH order: a later admit() writes its

@@ -54,11 +54,14 @@ class VStep:
         self.use_fused = bool(use_fused) and _fused_supported(stepper)
         self.n_traces = 0
         self.n_dispatches = 0
-        model = stepper.model
 
+        # closures read stepper.model at TRACE time: a planner-driven
+        # set_code_r swaps the coded context, its new parity shapes key a
+        # fresh trace, and that trace must see the new geometry
         def _round(params, state, toks, valid):
             self.n_traces += 1
-            logits, new_state = model.decode(params, state, toks, valid)
+            logits, new_state = stepper.model.decode(params, state, toks,
+                                                     valid)
             last = logits[:, -1:]
             nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
             return new_state, nxt, last
@@ -67,11 +70,12 @@ class VStep:
 
         def _round_fused(params, state, toks, valid, w_shards, parity_w):
             self.n_traces += 1
-            hidden, new_state = model.decode(params, state, toks, valid,
-                                             return_hidden=True)
+            hidden, new_state = stepper.model.decode(params, state, toks,
+                                                     valid,
+                                                     return_hidden=True)
             tok, _ = ops.fused_head_argmax(
                 hidden[:, -1, :].astype(jnp.float32), w_shards, parity_w,
-                valid, vocab=model.cfg.vocab)
+                valid, vocab=stepper.model.cfg.vocab)
             return new_state, tok[:, None]
 
         self._round_fused = jax.jit(_round_fused)

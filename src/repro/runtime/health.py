@@ -67,6 +67,7 @@ class ShardHealthController:
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
         self.n_shards = n_shards
+        self.split = split
         # Table 1 gate: an unsuitable split cannot carry offline parity, so
         # every failure is beyond-budget no matter how many parity shards
         # were provisioned.
@@ -74,6 +75,11 @@ class ShardHealthController:
         self.valid = np.ones(n_shards, bool)
         self._pending: list[ShardEvent] = sorted(events or [])
         self.log: list[tuple[ShardEvent, HealthAction]] = []
+        # high-water mark of concurrent dead shards since the last drain —
+        # a beyond-budget burst heals in the same round (replace_replica),
+        # so per-round mask sampling alone would never see it; the
+        # adaptive planner drains this per estimation window
+        self.peak_dead = 0
 
     # ----------------------------------------------------------- events ----
     def schedule(self, event: ShardEvent):
@@ -98,6 +104,7 @@ class ShardHealthController:
             else:
                 self.valid[ev.shard] = False
                 n_dead = int((~self.valid).sum())
+                self.peak_dead = max(self.peak_dead, n_dead)
                 action = (HealthAction.CONTINUE if n_dead <= self.budget
                           else HealthAction.REQUEUE)
         elif ev.kind is EventKind.RECOVERY:
@@ -114,6 +121,14 @@ class ShardHealthController:
         return action
 
     # ---------------------------------------------------------- healing ----
+    def set_budget(self, budget: int):
+        """Re-size the erasure budget (adaptive redundancy planner entry).
+        The Table-1 gate still applies: an unsuitable split keeps budget 0
+        no matter what the planner provisions."""
+        if budget < 0:
+            raise ValueError(f"budget must be >= 0, got {budget}")
+        self.budget = int(budget) if self.split.suitable_for_cdc else 0
+
     def replace_replica(self) -> int:
         """2MR path: swap in the standby, all shards healthy again.
 
@@ -122,6 +137,12 @@ class ShardHealthController:
         n_dead = int((~self.valid).sum())
         self.valid[:] = True
         return n_dead
+
+    def drain_peak_dead(self) -> int:
+        """Return the concurrent-dead high-water mark since the previous
+        drain and re-arm it at the current state."""
+        peak, self.peak_dead = self.peak_dead, self.n_dead
+        return peak
 
     @property
     def mask(self) -> np.ndarray:

@@ -23,6 +23,8 @@ _COUNTERS = (
     "beyond_budget_failures",
     "shards_healed",
     "parity_reencodes",
+    "faults_injected",
+    "replans",
 )
 
 
@@ -33,6 +35,7 @@ class RuntimeMetrics:
         self.queueing_ms: list[float] = []
         self.round_ms: list[float] = []       # MEASURED wall-clock rounds
         self.queue_depth: list[tuple[float, int]] = []   # (t_ms, depth)
+        self.plan_log: list[dict] = []        # adaptive-redundancy plans
         self.start_ms: float | None = None
         self.end_ms: float | None = None
 
@@ -53,6 +56,10 @@ class RuntimeMetrics:
 
     def sample_queue_depth(self, t_ms: float, depth: int):
         self.queue_depth.append((float(t_ms), int(depth)))
+
+    def observe_plan(self, plan: dict, applied: bool):
+        """One adaptive-redundancy planner decision (window boundary)."""
+        self.plan_log.append({"applied": bool(applied), **plan})
 
     def mark(self, t_ms: float):
         if self.start_ms is None:
@@ -98,6 +105,15 @@ class RuntimeMetrics:
                 "samples": len(depths),
                 "mean": float(np.mean(depths)) if depths else 0.0,
                 "max": int(max(depths)) if depths else 0,
+            },
+            "planner": {
+                "n_plans": len(self.plan_log),
+                "r_series": [[p["t_ms"], p["r"]] for p in self.plan_log],
+                "final_r": (self.plan_log[-1]["r"] if self.plan_log
+                            else None),
+                "max_r": (max(p["r"] for p in self.plan_log)
+                          if self.plan_log else None),
+                "plans": list(self.plan_log),
             },
         }
 

@@ -39,6 +39,7 @@ from typing import Any
 import numpy as np
 
 from repro.core.failure import StragglerModel, request_latency
+from repro.core.seeds import stream_rng
 from repro.runtime.clock import Clock, SimClock
 from repro.runtime.executor import (SlotPoolExecutor,
                                     supports_slot_batching)
@@ -90,7 +91,8 @@ class ContinuousBatchingScheduler:
     def __init__(self, stepper: ModelStepper, rcfg: RuntimeConfig,
                  clock: Clock | None = None,
                  health: ShardHealthController | None = None,
-                 metrics: RuntimeMetrics | None = None):
+                 metrics: RuntimeMetrics | None = None,
+                 latency: Any = None):
         self.stepper = stepper
         self.rcfg = rcfg
         self.clock = clock if clock is not None else SimClock()
@@ -101,8 +103,19 @@ class ContinuousBatchingScheduler:
         self.slots = [_Slot(i) for i in range(rcfg.n_slots)]
         self.completed: list[Request] = []
         self.shed: list[Request] = []
-        self._rng = np.random.default_rng(rcfg.seed)
+        # rcfg.seed is the run's ROOT seed: every stochastic component
+        # (modelled stragglers here, the fault injector, the injected
+        # latency process) derives an independent stream from it, so a
+        # chaos run reproduces bit-exact from one number.
+        self._rng = stream_rng(rcfg.seed, "straggler")
         self._next_rid = 0
+        # faults.InjectedLatency (or anything with .round_ms): replaces the
+        # plain StragglerModel draw for the simulated clock advance
+        self.latency = latency
+        # per-round injection hook point: fn(scheduler) runs at the top of
+        # every round, before health events apply (chaos injector, adaptive
+        # redundancy planner attach here)
+        self.round_hooks: list[Any] = []
 
         batched = rcfg.batched
         if batched is None:
@@ -117,18 +130,27 @@ class ContinuousBatchingScheduler:
     def submit(self, prompt, max_new_tokens: int,
                arrival_ms: float | None = None,
                deadline_ms: float | None = None,
-               priority: int = 0) -> Request:
+               priority: int = 0, extras: dict | None = None) -> Request:
         """Enqueue a request. ``arrival_ms`` lets timed workloads record
         the TRUE arrival instant even when submission happens at the next
         round boundary (latency then includes the sub-round wait); it must
         not lie in the future. ``deadline_ms``/``priority`` bend the
         admission order (earliest deadline / highest priority first); a
-        full queue sheds the worst-ordered request."""
+        full queue sheds the worst-ordered request. ``extras`` carries
+        unbatched per-request batch fields (enc-dec ``frames``) — only
+        the sequential slot path threads them into prefill, so they are
+        rejected on the batched executor rather than silently ignored."""
+        if extras and self.executor is not None:
+            raise ValueError(
+                "extras are only supported on the sequential slot path "
+                "(enc-dec fallback); this model runs the batched executor "
+                "— pass RuntimeConfig(batched=False) to use them")
         now = self.clock.now()
         arrival = now if arrival_ms is None else min(float(arrival_ms), now)
         req = Request(self._next_rid, np.asarray(prompt, np.int32),
                       int(max_new_tokens), arrival_ms=arrival,
-                      deadline_ms=deadline_ms, priority=priority)
+                      deadline_ms=deadline_ms, priority=priority,
+                      extras=extras)
         self._next_rid += 1
         self.metrics.count("requests_submitted")
         victim = self.queue.push(req)
@@ -209,6 +231,8 @@ class ContinuousBatchingScheduler:
                 slot.request = req
             else:
                 batch = {"tokens": req.prompt[None, :]}
+                for key, val in (req.extras or {}).items():
+                    batch[key] = np.asarray(val)[None, ...]
                 logits, state = self.stepper.prefill(batch, mask)
                 t = self.stepper.greedy(logits)
                 slot.request, slot.state, slot.last_tok = req, state, t
@@ -234,10 +258,13 @@ class ContinuousBatchingScheduler:
 
     # -------------------------------------------------------------- step ----
     def step(self) -> list[Request]:
-        """One decode round: apply due health events, admit into free slots,
-        decode one token per occupied slot — one jitted dispatch for the
-        whole pool on the batched path — and advance the clock."""
+        """One decode round: run injection hooks (chaos injector, adaptive
+        planner), apply due health events, admit into free slots, decode
+        one token per occupied slot — one jitted dispatch for the whole
+        pool on the batched path — and advance the clock."""
         self.metrics.mark(self.clock.now())
+        for hook in self.round_hooks:
+            hook(self)
         self._handle_health()
         self._admit()
 
@@ -294,10 +321,14 @@ class ContinuousBatchingScheduler:
     def _advance_clock(self):
         if not isinstance(self.clock, SimClock):
             return
-        if self.rcfg.straggler is not None:
-            T, r = self.stepper.n_shards, 0
-            if self.stepper.coded:
-                r = int(self.stepper.model.ctx.code_r)
+        T, r = self.stepper.n_shards, 0
+        if self.stepper.coded:
+            r = int(self.stepper.model.ctx.code_r)
+        if self.latency is not None:
+            # injected latency: same fault schedule as the health events
+            dt = self.latency.round_ms(self.clock.now(), T, r,
+                                       mask=self.health.mask)
+        elif self.rcfg.straggler is not None:
             times = self.rcfg.straggler.sample(self._rng, (T + r,))
             # coded rounds finish at the T-th of T+r arrivals; uncoded
             # rounds wait for all T shards (paper §6.2)

@@ -60,14 +60,36 @@ class ModelStepper:
         self.n_shards = max(int(model.ctx.tp), 1)
         spec = model.ctx.spec
         self.erasure_budget = int(spec.max_device_failures) if spec else 0
+        # reads self.model at trace time so set_code_r's swapped context is
+        # picked up: an r change alters the parity-leaf shapes, which is
+        # exactly what keys a fresh jit trace
         self._decode = jax.jit(
-            lambda p, st, tok, valid: model.decode(p, st, tok, valid))
+            lambda p, st, tok, valid: self.model.decode(p, st, tok, valid))
 
     # ------------------------------------------------------------ coding ----
     def reencode(self):
         """Offline parity re-encode (paper §5.1): run after a healed shard
         rejoins or a standby replica is swapped in."""
         self.params = self.model.encode_offline(self._raw_params)
+
+    def set_code_r(self, code_r: int) -> bool:
+        """Re-size the parity budget (adaptive redundancy): rebuild the
+        coded context and re-encode parity offline — the same heal +
+        re-encode path a replica swap takes, plus a round retrace since
+        the parity-weight shapes change. Decode slot states (KV caches)
+        are r-independent, so in-flight requests carry straight on.
+        Returns True iff the geometry changed."""
+        code_r = int(code_r)
+        if code_r < 0:
+            raise ValueError(f"code_r must be >= 0, got {code_r}")
+        if not self.coded or code_r == int(self.model.ctx.code_r):
+            return False
+        ctx = dataclasses.replace(self.model.ctx, code_r=code_r)
+        self.model = dataclasses.replace(self.model, ctx=ctx)
+        self.params = self.model.encode_offline(self._raw_params)
+        spec = ctx.spec
+        self.erasure_budget = int(spec.max_device_failures) if spec else 0
+        return True
 
     def full_mask(self) -> np.ndarray:
         return np.ones(self.n_shards, bool)

@@ -1,0 +1,496 @@
+"""Fault-injection chaos harness + adaptive redundancy planner.
+
+Tier-1 properties: the injector is deterministic under one root seed
+(bit-exact replay), traces round-trip through files, the planner sizes r
+from observed failure rates (never below observed concurrency, Table-1
+gate respected), the injected latency process reflects the fault state,
+and the runtime generates IDENTICAL tokens batched vs sequential under
+an identical injected fault schedule.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, smoke_config
+from repro.core.failure import StragglerModel
+from repro.core.policy import INPUT_SPLIT
+from repro.faults import (AdaptiveRedundancyPlanner, ChaosSpec,
+                          FaultInjector, InjectedLatency, LatencySpec,
+                          PlannerConfig, TraceInjector, attach_chaos,
+                          attach_planner, binomial_tail, churn_trace,
+                          load_trace, make_pi_rig_trace, parse_chaos,
+                          required_budget, stream_rng, write_trace)
+from repro.models import TPCtx, build
+from repro.runtime import (ContinuousBatchingScheduler, EventKind,
+                           RuntimeConfig, ShardHealthController,
+                           run_arrivals)
+from repro.serve import ModelStepper
+
+GEN = 6
+PROMPT_LEN = 8
+
+
+def _ev_tuples(evs):
+    return [(e.time_ms, e.kind, e.shard) for e in evs]
+
+
+@pytest.fixture(scope="module")
+def coded():
+    cfg = smoke_config(get_arch("granite-3-8b"))
+    model = build(cfg, TPCtx(tp=4, mode="coded", code_r=2, moe_capacity=0))
+    params = model.init(jax.random.PRNGKey(0))
+    stepper = ModelStepper(model, params, max_len=48)
+    return cfg, stepper
+
+
+def _fresh_stepper(code_r=2):
+    cfg = smoke_config(get_arch("granite-3-8b"))
+    model = build(cfg, TPCtx(tp=4, mode="coded", code_r=code_r,
+                             moe_capacity=0))
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, ModelStepper(model, params, max_len=48)
+
+
+def _prompts(cfg, n):
+    rng = np.random.default_rng(7)
+    return [rng.integers(0, cfg.vocab, PROMPT_LEN) for _ in range(n)]
+
+
+# ----------------------------------------------------------- injector ----
+
+def test_injector_deterministic_replay():
+    spec = ChaosSpec(mtbf_ms=100, mttr_ms=20, p_permanent=0.1,
+                     p_degraded=0.2, groups=2, burst_mtbf_ms=300)
+    a = FaultInjector(spec, 4, seed=5)
+    b = FaultInjector(spec, 4, seed=5)
+    evs_a = _ev_tuples(a.events_until(800.0))
+    evs_b = _ev_tuples(b.events_until(800.0))
+    assert evs_a == evs_b and evs_a
+    assert a.degraded == b.degraded
+    c = FaultInjector(spec, 4, seed=6)
+    evs_c = _ev_tuples(c.events_until(800.0))
+    assert evs_c != evs_a or c.degraded != a.degraded
+    # incremental pulls see the same schedule as one big pull
+    d = FaultInjector(spec, 4, seed=5)
+    inc = []
+    for t in np.linspace(50.0, 800.0, 16):
+        inc.extend(d.events_until(float(t)))
+    assert _ev_tuples(inc) == evs_a
+    with pytest.raises(ValueError):
+        d.events_until(10.0)        # time must be monotone
+
+
+def test_injector_event_structure():
+    # pure transient churn: erasures and recoveries alternate per device
+    inj = FaultInjector(ChaosSpec(mtbf_ms=50, mttr_ms=10), 3, seed=0)
+    evs = inj.events_until(2000.0)
+    assert evs and all(e.time_ms <= 2000.0 for e in evs)
+    state = {d: True for d in range(3)}
+    for e in evs:
+        if e.kind is EventKind.ERASURE:
+            assert state[e.shard], "erasure of an already-down device"
+            state[e.shard] = False
+        else:
+            assert not state[e.shard]
+            state[e.shard] = True
+    # permanent-only: no device ever recovers, each dies at most once
+    perm = FaultInjector(ChaosSpec(mtbf_ms=50, mttr_ms=10,
+                                   p_permanent=1.0), 4, seed=1)
+    evs = perm.events_until(5000.0)
+    assert all(e.kind is EventKind.ERASURE for e in evs)
+    assert len({e.shard for e in evs}) == len(evs) <= 4
+
+
+def test_injector_correlated_bursts_and_degraded():
+    spec = ChaosSpec(mtbf_ms=1e9, mttr_ms=10, groups=2, burst_mtbf_ms=200,
+                     burst_down_ms=25)
+    inj = FaultInjector(spec, 4, seed=3)
+    evs = inj.events_until(3000.0)
+    erasures = [e for e in evs if e.kind is EventKind.ERASURE]
+    assert erasures, "bursts must fire"
+    # a burst takes a whole AP group down at the same instant
+    by_time = {}
+    for e in erasures:
+        by_time.setdefault(e.time_ms, []).append(e.shard)
+    assert any(len(shards) == 2 for shards in by_time.values())
+    for shards in by_time.values():
+        groups = {d % 2 for d in shards}
+        assert len(groups) == 1, "burst crossed AP groups"
+    # degraded-only churn: no mask flips, slowdown visible mid-interval
+    deg = FaultInjector(ChaosSpec(mtbf_ms=40, mttr_ms=20, p_degraded=1.0,
+                                  degraded_factor=7.0), 2, seed=0)
+    assert deg.events_until(1000.0) == []
+    assert deg.degraded
+    t0, t1, d, f = deg.degraded[0]
+    slow = deg.slowdown_at((t0 + t1) / 2)
+    assert slow[d] == 7.0 and f == 7.0
+
+
+def test_trace_roundtrip_and_playback(tmp_path):
+    records = make_pi_rig_trace(horizon_ms=1500.0, n_shards=12, seed=2)
+    path = tmp_path / "rig.jsonl"
+    write_trace(str(path), records)
+    assert load_trace(str(path)) == records
+    inj = TraceInjector.from_file(str(path), 12)
+    evs = inj.events_until(1500.0)
+    mask_events = [r for r in records if r["kind"] != "degraded"]
+    assert len(evs) == len(mask_events)
+    assert inj.events_until(1500.0) == []          # consumed exactly once
+    # playback onto a smaller rig than the trace was recorded for fails
+    with pytest.raises(ValueError):
+        TraceInjector(records, 4)
+
+
+def test_trace_degraded_records_validated():
+    rec = {"t_ms": 0.0, "kind": "degraded", "shard": 7, "until_ms": 5.0}
+    with pytest.raises(ValueError):
+        TraceInjector([rec], 4)
+    with pytest.raises(ValueError):       # missing shard must not default
+        TraceInjector([{"t_ms": 0.0, "kind": "degraded",
+                        "until_ms": 5.0}], 4)
+
+
+def test_permanent_death_resumes_churn_after_replica_swap():
+    from repro.faults.injector import DEAD, UP
+    inj = FaultInjector(ChaosSpec(mtbf_ms=50, mttr_ms=10,
+                                  p_permanent=1.0), 2, seed=0)
+    evs = inj.events_until(2000.0)
+    assert evs and all(e.kind is EventKind.ERASURE for e in evs)
+    assert (inj.state == DEAD).all()
+    # in-budget permanent death (shard still masked dead): stays retired
+    still_dead = np.array([False, True])
+    inj.sync_replaced(still_dead, 2000.0)
+    assert inj.state[0] == DEAD and inj.state[1] == UP
+    # 2MR replica swap healed everything: churn must resume on the standby
+    inj.sync_replaced(np.ones(2, bool), 2000.0)
+    assert (inj.state == UP).all()
+    assert inj.events_until(100000.0), \
+        "replaced hardware must experience faults again"
+
+
+def test_extras_rejected_on_batched_executor(coded):
+    cfg, stepper = coded
+    sched = ContinuousBatchingScheduler(stepper, RuntimeConfig(n_slots=1))
+    assert sched.executor is not None
+    with pytest.raises(ValueError, match="sequential"):
+        sched.submit(np.arange(4), 2, extras={"frames": np.zeros((2, 2))})
+
+
+def test_churn_trace_stays_in_budget():
+    rec = churn_trace(4, 0.0, 1000.0, period_ms=100.0, down_ms=40.0,
+                      concurrent=2)
+    down, max_down = set(), 0
+    for r in sorted(rec, key=lambda r: (r["t_ms"], r["kind"] != "erasure")):
+        if r["kind"] == "erasure":
+            down.add(r["shard"])
+        else:
+            down.discard(r["shard"])
+        max_down = max(max_down, len(down))
+    assert max_down == 2
+    with pytest.raises(ValueError):
+        churn_trace(4, 0.0, 100.0, period_ms=50.0, down_ms=60.0)
+
+
+def test_parse_chaos(tmp_path):
+    inj = parse_chaos("weibull:mtbf=300,mttr=40,p_perm=0.05,groups=2,"
+                      "burst_mtbf=500", 4, seed=1)
+    assert isinstance(inj, FaultInjector)
+    assert inj.spec.fail_dist == "weibull"
+    assert inj.spec.mtbf_ms == 300 and inj.spec.p_permanent == 0.05
+    assert inj.spec.groups == 2
+    path = tmp_path / "t.jsonl"
+    write_trace(str(path), churn_trace(4, 0.0, 100.0, 50.0, 20.0))
+    assert isinstance(parse_chaos(str(path), 4), TraceInjector)
+    with pytest.raises(ValueError):
+        parse_chaos("exp:bogus=1", 4)
+    with pytest.raises(ValueError):
+        parse_chaos("gauss:mtbf=10", 4)
+
+
+def test_stream_rng_independence():
+    a, b = stream_rng(0, "injector"), stream_rng(0, "latency")
+    assert a.random(4).tolist() != b.random(4).tolist()
+    assert stream_rng(0, "injector").random(4).tolist() == \
+        stream_rng(0, "injector").random(4).tolist()
+
+
+# ------------------------------------------------------------ planner ----
+
+def test_binomial_tail_and_required_budget():
+    assert binomial_tail(4, 0.0, 0) == 0.0
+    assert binomial_tail(4, 1.0, 3) == 1.0
+    assert binomial_tail(4, 1.0, 4) == 0.0
+    p = 0.1
+    assert binomial_tail(2, p, 0) == pytest.approx(1 - (1 - p) ** 2)
+    assert required_budget(4, 0.0, 0.999, 4) == 0
+    assert required_budget(4, 0.001, 0.999, 4) == 1
+    assert required_budget(4, 0.9, 0.999999, 2) == 2   # capped at b_max
+
+
+def test_planner_raises_and_lowers_with_cooldown():
+    cfg = PlannerConfig(window_ms=10.0, min_budget=1, max_budget=2,
+                        ewma=1.0, cooldown_windows=2)
+    p = AdaptiveRedundancyPlanner(cfg, 4, layout="folded")
+    two_dead = np.array([False, False, True, True])
+    healthy = np.ones(4, bool)
+    for t in range(11):
+        p.observe_round(float(t), two_dead)
+    plan = p.maybe_plan(11.0)
+    assert plan is not None and plan.budget == 2 and plan.r == 4
+    assert plan.window_max_dead == 2
+
+    def calm_window(t0):
+        for t in range(11):
+            p.observe_round(t0 + t, healthy)
+        return p.maybe_plan(t0 + 11.0)
+
+    first = calm_window(20.0)
+    assert first.budget == 2, "one calm window must not strip redundancy"
+    second = calm_window(40.0)
+    assert second.budget == 1 and second.r == 2, \
+        "two calm windows should lower r"
+    # mid-window polls return None
+    p.observe_round(60.0, healthy)
+    assert p.maybe_plan(60.5) is None
+
+
+def test_planner_floors_at_observed_concurrency():
+    """Even when the rate estimate says calm, the plan never drops below
+    what actually happened in the window."""
+    cfg = PlannerConfig(window_ms=10.0, min_budget=1, max_budget=2,
+                        ewma=0.01)   # rate estimate barely moves
+    p = AdaptiveRedundancyPlanner(cfg, 4)
+    healthy = np.ones(4, bool)
+    for t in range(10):
+        p.observe_round(float(t), healthy)
+    h = ShardHealthController(4, budget=1)
+    from repro.runtime import erasure
+    h.apply(erasure(5.0, 0))
+    h.apply(erasure(5.1, 1))       # beyond budget: peak_dead = 2
+    h.replace_replica()
+    plan = p.maybe_plan(11.0, health=h)
+    assert plan.budget == 2, "observed 2 concurrent dead must floor the plan"
+
+
+def test_planner_table1_gate_routes_to_2mr():
+    cfg = PlannerConfig(window_ms=10.0, min_budget=1, max_budget=2)
+    p = AdaptiveRedundancyPlanner(cfg, 4, suitable=False)
+    dead = np.array([False, False, True, True])
+    for t in range(11):
+        p.observe_round(float(t), dead)
+    plan = p.maybe_plan(11.0)
+    assert plan.r == 0, "unsuitable split cannot carry parity"
+    assert plan.standby_replicas == 2, "tolerance must come from 2MR"
+
+
+def test_health_set_budget_respects_table1_gate():
+    h = ShardHealthController(4, budget=1)
+    h.set_budget(2)
+    assert h.budget == 2
+    gated = ShardHealthController(4, budget=2, split=INPUT_SPLIT)
+    gated.set_budget(3)
+    assert gated.budget == 0
+    with pytest.raises(ValueError):
+        h.set_budget(-1)
+
+
+# ------------------------------------------------------------ latency ----
+
+class _StillInjector:
+    def __init__(self, n_shards, factors=None):
+        self.n_shards = n_shards
+        self._f = np.ones(n_shards) if factors is None else \
+            np.asarray(factors, float)
+
+    def slowdown_at(self, t_ms):
+        return self._f.copy()
+
+
+def test_injected_latency_reflects_fault_state():
+    spec = LatencySpec(base=StragglerModel(floor_ms=10.0, mu=0.0,
+                                           sigma=0.3), timeout_ms=500.0)
+    T, r = 4, 2
+    healthy = InjectedLatency(spec, _StillInjector(T), seed=0)
+    dt_h = healthy.round_ms(0.0, T, r, mask=np.ones(T, bool))
+    assert 10.0 < dt_h < 500.0
+    # same seed => same draws: an in-budget death only moves the order
+    # statistic, it never stalls the round
+    dead = InjectedLatency(spec, _StillInjector(T), seed=0)
+    mask = np.ones(T, bool)
+    mask[1] = False
+    dt_d = dead.round_ms(0.0, T, r, mask=mask)
+    assert dt_d < 500.0 and dt_d >= dt_h
+    # uncoded (r=0) with a dead device stalls to the timeout
+    unc = InjectedLatency(spec, _StillInjector(T), seed=0)
+    assert unc.round_ms(0.0, T, 0, mask=mask) == 500.0
+    # degraded devices inflate the round; replay is bit-exact
+    slow = InjectedLatency(spec, _StillInjector(T, [50.0] * T), seed=0)
+    assert slow.round_ms(0.0, T, r, mask=np.ones(T, bool)) > dt_h
+    again = InjectedLatency(spec, _StillInjector(T), seed=0)
+    assert again.round_ms(0.0, T, r, mask=np.ones(T, bool)) == dt_h
+
+
+# ----------------------------------------------- runtime under chaos ----
+
+def _chaos_sched(stepper, trace, *, batched=None, n_slots=2):
+    injector = TraceInjector(trace, stepper.n_shards)
+    health = ShardHealthController(stepper.n_shards,
+                                   stepper.erasure_budget)
+    sched = ContinuousBatchingScheduler(
+        stepper, RuntimeConfig(n_slots=n_slots, batched=batched),
+        health=health)
+    attach_chaos(sched, injector)
+    return sched
+
+
+def test_batched_equals_sequential_under_identical_fault_schedule(coded):
+    """The acceptance property: one fault schedule, both executors,
+    token-for-token identical output."""
+    cfg, stepper = coded
+    prompts = _prompts(cfg, 4)
+    trace = churn_trace(4, 2.0, 40.0, period_ms=8.0, down_ms=3.0,
+                        concurrent=1)
+
+    def serve(batched):
+        sched = _chaos_sched(stepper, trace, batched=batched)
+        done = run_arrivals(sched, [(i * 1.5, p, GEN)
+                                    for i, p in enumerate(prompts)])
+        assert len(done) == 4
+        assert sched.metrics.counters["faults_injected"] > 0
+        return ({r.rid: r.tokens for r in done},
+                dict(sched.metrics.counters))
+
+    toks_b, counters_b = serve(True)
+    toks_s, counters_s = serve(False)
+    assert toks_b == toks_s
+    # round counts (and hence how far into the schedule each run pulls)
+    # legitimately differ by the overlap drain round; what must agree is
+    # that BOTH paths recovered erasures in-step and lost nothing
+    assert counters_b["erasures_recovered"] > 0
+    assert counters_s["erasures_recovered"] > 0
+    assert counters_b["beyond_budget_failures"] == \
+        counters_s["beyond_budget_failures"] == 0
+
+
+def test_chaos_run_replays_bit_exact(coded):
+    """One root seed drives stragglers + injector + latency: two runs are
+    identical except the measured wall-clock series."""
+    cfg, stepper = coded
+    prompts = _prompts(cfg, 3)
+    spec = ChaosSpec(mtbf_ms=400.0, mttr_ms=80.0, p_degraded=0.2)
+
+    def once():
+        injector = FaultInjector(spec, stepper.n_shards, seed=9)
+        latency = InjectedLatency(
+            LatencySpec(base=StragglerModel(floor_ms=2.0, mu=0.0,
+                                            sigma=0.5)), injector, seed=9)
+        health = ShardHealthController(stepper.n_shards,
+                                       stepper.erasure_budget)
+        sched = ContinuousBatchingScheduler(
+            stepper, RuntimeConfig(n_slots=2, seed=9), health=health,
+            latency=latency)
+        attach_chaos(sched, injector)
+        done = run_arrivals(sched, [(i * 3.0, p, GEN)
+                                    for i, p in enumerate(prompts)])
+        return {r.rid: r.tokens for r in done}, sched.metrics.snapshot()
+
+    toks_a, snap_a = once()
+    toks_b, snap_b = once()
+    assert toks_a == toks_b
+    meas_a = snap_a.pop("round_latency_measured")
+    meas_b = snap_b.pop("round_latency_measured")
+    assert meas_a["n"] == meas_b["n"] > 0
+    assert snap_a == snap_b
+
+
+def test_in_budget_chaos_loses_nothing_and_tokens_match(coded):
+    cfg, stepper = coded
+    prompts = _prompts(cfg, 4)
+    arrivals = [(i * 2.0, p, GEN) for i, p in enumerate(prompts)]
+
+    base = _chaos_sched(stepper, [])
+    toks_base = {r.rid: r.tokens for r in run_arrivals(base, arrivals)}
+
+    trace = churn_trace(4, 1.0, 60.0, period_ms=10.0, down_ms=4.0,
+                        concurrent=1)
+    sched = _chaos_sched(stepper, trace)
+    toks = {r.rid: r.tokens for r in run_arrivals(sched, arrivals)}
+    c = sched.metrics.counters
+    assert toks == toks_base
+    assert c["requests_completed"] == 4
+    assert c["beyond_budget_failures"] == 0
+    assert c["erasures_recovered"] > 0
+
+
+# ---------------------------------------------- adaptive replanning ----
+
+def test_set_code_r_reencodes_and_resizes_budget():
+    cfg, stepper = _fresh_stepper(code_r=2)
+    assert stepper.erasure_budget == 1
+    old_cdc_shape = np.asarray(
+        stepper.params["lm_head"]["cdc"]).shape
+    assert stepper.set_code_r(4)
+    assert stepper.erasure_budget == 2
+    assert int(stepper.model.ctx.code_r) == 4
+    new_cdc_shape = np.asarray(stepper.params["lm_head"]["cdc"]).shape
+    assert new_cdc_shape != old_cdc_shape
+    assert not stepper.set_code_r(4)     # no-op at the same geometry
+    # decode still works at the new geometry, with 2 erasures recovered
+    sched = ContinuousBatchingScheduler(stepper, RuntimeConfig(n_slots=1))
+    from repro.runtime import erasure
+    sched.health.set_budget(stepper.erasure_budget)
+    sched.health.schedule(erasure(1.0, 0))
+    sched.health.schedule(erasure(1.5, 3))
+    rng = np.random.default_rng(3)
+    done = run_arrivals(sched, [(0.0, rng.integers(0, cfg.vocab,
+                                                   PROMPT_LEN), GEN)])
+    assert len(done) == 1 and len(done[0].tokens) == GEN
+    assert sched.metrics.counters["beyond_budget_failures"] == 0
+
+
+def test_adaptive_planner_raises_and_lowers_r_end_to_end():
+    """Calm -> storm (2 concurrent dead > budget) -> calm: the planner
+    raises r via heal+re-encode, the storm then recovers in-step, and r
+    comes back down after the cooldown. No request is lost."""
+    cfg, stepper = _fresh_stepper(code_r=2)
+    trace = churn_trace(4, 20.0, 80.0, period_ms=8.0, down_ms=3.0,
+                        concurrent=2)
+    sched = _chaos_sched(stepper, trace, n_slots=2)
+    planner = AdaptiveRedundancyPlanner(
+        PlannerConfig(window_ms=10.0, min_budget=1, max_budget=2,
+                      cooldown_windows=2), stepper.n_shards,
+        layout=stepper.model.ctx.code_layout)
+    attach_planner(sched, planner)
+    rng = np.random.default_rng(5)
+    arrivals = [(i * 10.0, rng.integers(0, cfg.vocab, PROMPT_LEN), GEN)
+                for i in range(14)]
+    done = run_arrivals(sched, arrivals)
+    c = sched.metrics.counters
+    snap = sched.metrics.snapshot()
+    rs = [r for _, r in snap["planner"]["r_series"]]
+    assert len(done) == 14, "adaptive run lost a request"
+    assert max(rs) == 4, f"planner never raised r: {rs}"
+    assert rs[0] == 2 and rs[-1] == 2, f"r did not return to calm: {rs}"
+    assert c["replans"] >= 2
+    # converged budget covers the worst observed concurrency
+    assert max(p["budget"] for p in sched.metrics.plan_log) >= 2
+    # once raised, later storm waves recover in-step (CDC path)
+    assert c["erasures_recovered"] > 0
+    assert sched.health.budget == stepper.erasure_budget
+
+
+def test_apply_plan_never_shrinks_below_live_dead_shards():
+    from repro.faults import RedundancyPlan, apply_plan
+    from repro.runtime import erasure
+    cfg, stepper = _fresh_stepper(code_r=4)
+    sched = ContinuousBatchingScheduler(stepper, RuntimeConfig(n_slots=1))
+    sched.health.set_budget(stepper.erasure_budget)     # budget 2
+    sched.health.apply(erasure(0.0, 0))
+    sched.health.apply(erasure(0.5, 1))                 # 2 dead, in budget
+    plan = RedundancyPlan(t_ms=1.0, budget=1, r=2, standby_replicas=1,
+                          est_unavailability=0.0, window_max_dead=0,
+                          reason="test")
+    apply_plan(sched, plan)
+    # 2 shards are dead: the code must keep covering them
+    assert stepper.erasure_budget >= 2
+    assert int(stepper.model.ctx.code_r) == 4

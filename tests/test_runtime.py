@@ -143,6 +143,43 @@ def test_deterministic_clock_repeatability(coded):
     assert snap_a == snap_b
 
 
+def test_deterministic_chaos_repeatability(coded):
+    """Seed plumbing: ONE root seed threads the straggler stream, the
+    fault injector, and the injected latency process, so a chaos run —
+    fault schedule included — replays bit-exact. As with the plain
+    determinism test, the MEASURED wall-clock series only repeats in
+    count, not values."""
+    from repro.faults import (ChaosSpec, FaultInjector, InjectedLatency,
+                              LatencySpec, attach_chaos)
+    from repro.core.failure import StragglerModel
+    cfg, stepper = coded
+    prompts = _prompts(cfg, 3)
+    spec = ChaosSpec(mtbf_ms=60.0, mttr_ms=12.0, p_degraded=0.25)
+    root_seed = 11
+
+    def once():
+        injector = FaultInjector(spec, stepper.n_shards, seed=root_seed)
+        latency = InjectedLatency(
+            LatencySpec(base=StragglerModel(floor_ms=1.0, mu=0.0,
+                                            sigma=0.5)),
+            injector, seed=root_seed)
+        sched = _sched(stepper, n_slots=2, seed=root_seed)
+        sched.latency = latency
+        attach_chaos(sched, injector)
+        done = run_arrivals(sched, [(i * 3.0, p, GEN)
+                                    for i, p in enumerate(prompts)])
+        return {r.rid: r.tokens for r in done}, sched.metrics.snapshot()
+
+    toks_a, snap_a = once()
+    toks_b, snap_b = once()
+    assert toks_a == toks_b
+    assert snap_a["counters"]["faults_injected"] > 0
+    meas_a = snap_a.pop("round_latency_measured")
+    meas_b = snap_b.pop("round_latency_measured")
+    assert meas_a["n"] == meas_b["n"] > 0
+    assert snap_a == snap_b
+
+
 def test_metrics_counters_add_up(coded):
     cfg, stepper = coded
     sched = _sched(stepper, n_slots=2)
@@ -168,6 +205,51 @@ def test_idle_gap_fast_forwards_clock(coded):
     run_arrivals(sched, [(0.0, prompts[0], 2), (500.0, prompts[1], 2)])
     assert sched.clock.now() >= 500.0
     assert sched.metrics.counters["requests_completed"] == 2
+
+
+# ------------------------------------------- enc-dec sequential fallback ----
+
+def test_encdec_fallback_heals_and_reencodes_on_midrun_failure():
+    """ROADMAP open item pin: enc-dec (whisper) slots fall back to
+    sequential stepping — a mid-run in-budget erasure must recover
+    in-step and a beyond-budget failure must still requeue + heal +
+    re-encode, with tokens identical to the fault-free stream."""
+    cfg = smoke_config(get_arch("whisper-medium"))
+    model = build(cfg, TPCtx(tp=4, mode="coded", code_r=2, moe_capacity=0))
+    params = model.init(jax.random.PRNGKey(0))
+    stepper = ModelStepper(model, params, max_len=32)
+    assert stepper.erasure_budget == 1
+    rng = np.random.default_rng(11)
+    frames = rng.normal(size=(cfg.enc_seq, cfg.d_model)).astype(np.float32)
+    prompts = _prompts(cfg, 3)
+
+    def serve(events):
+        sched = _sched(stepper, n_slots=2, events=events)
+        assert sched.executor is None, "enc-dec must use sequential slots"
+        for i, p in enumerate(prompts):
+            sched.submit(p, GEN, extras={"frames": frames})
+        done = sched.run()
+        return sched, {r.rid: r.tokens for r in done}
+
+    s_ok, toks_ok = serve([])
+    assert len(toks_ok) == 3
+
+    # in-budget: shard dies mid-decode, CDC recovers in-step
+    s_cdc, toks_cdc = serve([erasure(2.0, 1)])
+    assert toks_cdc == toks_ok
+    assert s_cdc.metrics.counters["erasures_recovered"] == 1
+    assert s_cdc.metrics.counters["beyond_budget_failures"] == 0
+
+    # beyond budget: 2nd concurrent erasure takes the 2MR fallback —
+    # requeue in-flight, swap the replica in, re-encode parity
+    s_2mr, toks_2mr = serve([erasure(2.0, 1), erasure(3.0, 2)])
+    c = s_2mr.metrics.counters
+    assert toks_2mr == toks_ok, "a request was lost or corrupted"
+    assert c["beyond_budget_failures"] == 1
+    assert c["requests_requeued"] >= 1
+    assert c["shards_healed"] >= 2
+    assert c["parity_reencodes"] >= 1
+    assert s_2mr.health.mask.all(), "replica swap must heal all shards"
 
 
 # --------------------------------------------- health controller (pure) ----
