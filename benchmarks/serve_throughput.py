@@ -9,11 +9,14 @@ requests ("the system never loses a request"), while the uncoded baseline
 pays the 2MR requeue path. Emits a JSON metrics report.
 
 Alongside the modelled (sim-clock) numbers the report carries MEASURED
-wall-clock round latency, and an executor comparison: the same coded
-workload through the batched slot executor (one jitted dispatch per
-round) vs sequential per-slot stepping (n_slots dispatches). The
-comparison is written to ``BENCH_serve.json`` (repo root) as the bench
-trajectory seed.
+wall-clock round latency, and a per-architecture executor comparison:
+the same coded workload through the batched slot executor (one jitted
+dispatch per round) vs sequential per-slot stepping (n_slots
+dispatches), for every slot-batched family — decoder-only (granite),
+enc-dec (whisper, per-slot extras bank), and xLSTM (positionless block
+state). The comparison is written to ``BENCH_serve.json`` (repo root) as
+the bench trajectory seed; CI asserts batched >= sequential for all
+three.
 
 Run:  PYTHONPATH=src python benchmarks/serve_throughput.py --smoke
       PYTHONPATH=src python benchmarks/serve_throughput.py --smoke \
@@ -37,13 +40,21 @@ from repro.serve import ModelStepper
 
 
 def make_workload(rng: np.random.Generator, n_requests: int, rate_rps: float,
-                  prompt_len: int, gen_tokens: int, vocab: int
-                  ) -> list[tuple[float, np.ndarray, int]]:
-    """Poisson arrivals: iid exponential gaps at ``rate_rps`` (sim time)."""
+                  prompt_len: int, gen_tokens: int, cfg) -> list[tuple]:
+    """Poisson arrivals: iid exponential gaps at ``rate_rps`` (sim time).
+    Enc-dec configs get fresh per-request encoder frames as a 4th extras
+    element (threaded into the executor's stacked extras bank)."""
     gaps_ms = rng.exponential(1e3 / rate_rps, size=n_requests)
     arrivals = np.cumsum(gaps_ms)
-    return [(float(t), rng.integers(0, vocab, prompt_len), gen_tokens)
-            for t in arrivals]
+    out = []
+    for t in arrivals:
+        entry = (float(t), rng.integers(0, cfg.vocab, prompt_len),
+                 gen_tokens)
+        if cfg.is_encdec:
+            entry += ({"frames": rng.normal(
+                size=(cfg.enc_seq, cfg.d_model)).astype(np.float32)},)
+        out.append(entry)
+    return out
 
 
 def run_mode(cfg, workload, *, coded: bool, tp: int, code_r: int,
@@ -55,7 +66,7 @@ def run_mode(cfg, workload, *, coded: bool, tp: int, code_r: int,
                     code_r=code_r, moe_capacity=0)
         model = build(cfg, ctx)
         params = model.init(jax.random.PRNGKey(0))
-        max_len = max(len(p) + n for _, p, n in workload) + 8
+        max_len = max(len(w[1]) + w[2] for w in workload) + 8
         stepper = ModelStepper(model, params, max_len=max_len)
     events = [] if fail_time_ms is None else [erasure(fail_time_ms,
                                                       fail_shard)]
@@ -94,7 +105,7 @@ def executor_comparison(cfg, workload, common: dict) -> dict:
                 moe_capacity=0)
     model = build(cfg, ctx)
     params = model.init(jax.random.PRNGKey(0))
-    max_len = max(len(p) + n for _, p, n in workload) + 8
+    max_len = max(len(w[1]) + w[2] for w in workload) + 8
     stepper = ModelStepper(model, params, max_len=max_len)
     out = {}
     for name, batched in (("sequential", False), ("batched", True)):
@@ -114,12 +125,28 @@ def executor_comparison(cfg, workload, common: dict) -> dict:
     return out
 
 
+def zoo_executor_comparison(archs: list[str], smoke: bool, args,
+                            common: dict) -> dict:
+    """Batched-vs-sequential rows for every named architecture (each with
+    its own workload; enc-dec workloads carry per-request frames)."""
+    out = {}
+    for arch in archs:
+        acfg = get_arch(arch)
+        if smoke:
+            acfg = smoke_config(acfg)
+        arng = np.random.default_rng(args.seed)
+        wl = make_workload(arng, args.n_requests, args.rate_rps,
+                           args.prompt_len, args.gen_tokens, acfg)
+        out[arch] = executor_comparison(acfg, wl, common)
+    return out
+
+
 def run() -> list[dict]:
     """``benchmarks.run --all`` entry: smoke-scale coded vs uncoded rows
     (Poisson load, mid-run erasure, coded must complete 100%)."""
     cfg = smoke_config(get_arch("granite-3-8b"))
     rng = np.random.default_rng(0)
-    workload = make_workload(rng, 8, 25.0, 8, 4, cfg.vocab)
+    workload = make_workload(rng, 8, 25.0, 8, 4, cfg)
     common = dict(tp=4, code_r=2, n_slots=4,
                   fail_time_ms=workload[len(workload) // 2][0],
                   fail_shard=1, straggler=StragglerModel(), seed=0)
@@ -161,6 +188,11 @@ def main():
                     help="batched-vs-sequential bench report path "
                          "('' disables)")
     ap.add_argument("--skip-executor-compare", action="store_true")
+    ap.add_argument("--compare-archs",
+                    default="granite-3-8b,whisper-medium,xlstm-125m",
+                    help="comma-separated archs for the per-architecture "
+                         "batched-vs-sequential comparison (every slot-"
+                         "batched family rides the same executor)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -168,7 +200,7 @@ def main():
         cfg = smoke_config(cfg)
     rng = np.random.default_rng(args.seed)
     workload = make_workload(rng, args.n_requests, args.rate_rps,
-                             args.prompt_len, args.gen_tokens, cfg.vocab)
+                             args.prompt_len, args.gen_tokens, cfg)
     fail_time = None
     if not args.no_failure:
         fail_time = (args.fail_time_ms if args.fail_time_ms is not None
@@ -196,8 +228,10 @@ def main():
                 1 - c["request_latency"]["p99_ms"]
                 / u["request_latency"]["p99_ms"])
     if not args.skip_executor_compare:
-        report["executor_comparison"] = executor_comparison(cfg, workload,
-                                                            common)
+        archs = [a.strip() for a in args.compare_archs.split(",")
+                 if a.strip()]
+        report["executor_comparison"] = zoo_executor_comparison(
+            archs, args.smoke, args, common)
 
     print(json.dumps(report, indent=2, sort_keys=True))
     if args.out:

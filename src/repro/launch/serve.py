@@ -1,16 +1,21 @@
 """Serving driver: runtime-scheduled generation with CDC fault injection.
 
 Drives the coded cluster runtime (``repro.runtime``): requests are
-submitted to the continuous-batching scheduler — by default the BATCHED
-slot executor advances every decode slot in one jitted dispatch per round
-— and a shard erasure can be injected at a simulated time; within the
-code's budget the runtime recovers in-step, beyond it the CDC+2MR hybrid
-requeues and heals.
+submitted to the continuous-batching scheduler — the BATCHED slot
+executor advances every decode slot in one jitted dispatch per round for
+EVERY zoo architecture (enc-dec requests carry per-request encoder
+frames into the stacked extras bank; xLSTM stacks its positionless block
+state) — and a shard erasure can be injected at a simulated time; within
+the code's budget the runtime recovers in-step, beyond it the CDC+2MR
+hybrid requeues and heals.
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b --smoke \\
       --coded --fail-time-ms 4 --fail-shard 2
+  PYTHONPATH=src python -m repro.launch.serve --arch whisper-medium \\
+      --smoke --coded --fail-time-ms 4 --fail-shard 2
 
-``--sequential`` steps slots one dispatch each (the pre-executor path),
+``--sequential`` keeps the per-slot stepping alive as the test oracle /
+escape hatch (it is no longer the production path for any family),
 ``--no-overlap`` disables host/device round pipelining, ``--deadline-ms``
 and ``--max-queue-depth`` exercise the SLO admission queue. ``--legacy``
 runs the old one-batch-at-a-time ServingEngine path with the original
@@ -83,7 +88,10 @@ def main():
                     help="legacy mode: decode step to kill the shard at")
     ap.add_argument("--legacy", action="store_true")
     ap.add_argument("--sequential", action="store_true",
-                    help="per-slot stepping instead of the batched executor")
+                    help="oracle-only per-slot stepping (one dispatch per "
+                         "slot) instead of the batched executor; every "
+                         "family — enc-dec and xLSTM included — batches "
+                         "by default")
     ap.add_argument("--no-overlap", action="store_true",
                     help="harvest each round synchronously (no pipelining)")
     ap.add_argument("--fused", action="store_true",
@@ -150,18 +158,27 @@ def main():
             suitable=stepper.erasure_budget > 0 or not args.coded)
         attach_planner(sched, planner)
     rng = np.random.default_rng(1)
+
+    def extras():
+        # enc-dec: per-request encoder frames (frontend stub) — threaded
+        # into the executor's stacked extras bank at admission
+        if not cfg.is_encdec:
+            return None
+        return {"frames": rng.normal(
+            size=(cfg.enc_seq, cfg.d_model)).astype(np.float32)}
+
     if args.deadline_ms is not None:
-        arrivals = []
         for i in range(args.requests):
             t = i * args.arrival_gap_ms
             sched.submit(rng.integers(0, cfg.vocab, args.prompt_len),
                          args.gen_tokens, arrival_ms=None,
-                         deadline_ms=t + args.deadline_ms)
+                         deadline_ms=t + args.deadline_ms,
+                         extras=extras())
         completed = sched.run()
     else:
         arrivals = [(i * args.arrival_gap_ms,
                      rng.integers(0, cfg.vocab, args.prompt_len),
-                     args.gen_tokens) for i in range(args.requests)]
+                     args.gen_tokens, extras()) for i in range(args.requests)]
         completed = run_arrivals(sched, arrivals)
     mode = "sequential" if sched.executor is None else \
         ("batched+overlap" if rcfg.overlap else "batched")

@@ -10,6 +10,11 @@ Decoder: causal self-attention (+ KV cache) and cross-attention over the
 encoder output (cross-KV computed once per request and cached). All QKV /
 FFN-up projections are column-parallel => coded under CDC like every other
 arch; whisper has no decode-free path — decode shapes exercise the decoder.
+
+``init_decode_state(per_row=True)`` emits the slot-batched layout the
+runtime executor stacks: per-row self-attention cache positions plus a
+per-row cross-KV "extras bank" ([L, B, Se, ...] K/V with [L, B, Se]
+positions), so enc-dec slots ride the one-dispatch-per-round path.
 """
 from __future__ import annotations
 
@@ -125,24 +130,36 @@ def forward(cfg, params: Params, ctx: TPCtx, tokens: jax.Array,
 
 def init_decode_state(cfg, ctx: TPCtx, params: Params, frames: jax.Array,
                       batch: int, max_len: int, dtype=jnp.bfloat16,
-                      valid=None) -> Params:
+                      valid=None, per_row: bool = False) -> Params:
     """Runs the encoder once, precomputes per-layer cross-KV, allocates the
-    self-attention cache."""
+    self-attention cache.
+
+    ``per_row=True`` builds the slot-batched layout: the self-attention
+    cache carries per-row lengths/positions and the cross-KV positions are
+    per-row too ([B, Se] per layer), so every decode-state leaf — the
+    encoder-derived cross-attention bank included — is [L, B, ...] and a
+    slot admission can overwrite one row of the stacked executor state."""
+    b = frames.shape[0]
     enc = encode(cfg, params, ctx, frames, valid)
 
     def one_xkv(p):
         k, v, kp = attn_mod.cross_kv(ctx, p["cross"], cfg, enc, valid)
+        if per_row:
+            kp = jnp.broadcast_to(kp, (b, kp.shape[-1]))
         return {"k": k.astype(dtype), "v": v.astype(dtype), "pos": kp}
 
     xkv = jax.vmap(one_xkv)(params["dec_layers"])
     kv = jax.vmap(lambda _: attn_mod.init_cache(
-        cfg, batch, max_len, dtype, tp=ctx.tp))(jnp.arange(cfg.n_layers))
+        cfg, batch, max_len, dtype, tp=ctx.tp,
+        per_row=per_row))(jnp.arange(cfg.n_layers))
     return {"kv": kv, "xkv": xkv}
 
 
 def decode_step(cfg, params: Params, ctx: TPCtx, state: Params,
                 tokens: jax.Array, valid=None, *, kv_chunk: int = 1024,
-                last_only: bool = False) -> tuple[jax.Array, Params]:
+                last_only: bool = False, return_hidden: bool = False
+                ) -> tuple[jax.Array, Params]:
+    # [] (scalar, shared) or [B] (per-row slot positions); same all layers
     pos = state["kv"]["len"][0]
     x = params["embed"][tokens].astype(params["embed"].dtype)
     s = tokens.shape[1]
@@ -151,7 +168,10 @@ def decode_step(cfg, params: Params, ctx: TPCtx, state: Params,
     # wrap keeps the lowering well-defined)
     tab = max(8192, s)
     pe = sinusoidal_pos(tab, cfg.d_model, x.dtype)
-    x = x + jax.lax.dynamic_slice_in_dim(pe, pos % tab, s, 0)[None]
+    if jnp.ndim(pos):
+        x = x + pe[(pos[:, None] + jnp.arange(s)) % tab]
+    else:
+        x = x + jax.lax.dynamic_slice_in_dim(pe, pos % tab, s, 0)[None]
     x = ctx.shard_act(x)
 
     def body(x, inp):
@@ -167,5 +187,8 @@ def decode_step(cfg, params: Params, ctx: TPCtx, state: Params,
     if last_only:
         x = x[:, -1:]
     x = layernorm(params["dec_ln_f"], x, cfg.norm_eps)
+    new_state = {"kv": new_kv, "xkv": state["xkv"]}
+    if return_hidden:
+        return x, new_state
     logits = col_dense(ctx, params["lm_head"], x, cfg.vocab, valid)
-    return logits.astype(jnp.float32), {"kv": new_kv, "xkv": state["xkv"]}
+    return logits.astype(jnp.float32), new_state

@@ -149,10 +149,11 @@ def init_decode_state(cfg, ctx: TPCtx, batch: int, max_len: int,
     admission rewrites one row in place without recompiling."""
     state: Params = {}
     if cfg.ssm_kind == "xlstm":
-        if per_row:
-            raise NotImplementedError(
-                "per-row decode state needs a KV cache; xLSTM blocks are "
-                "positionless recurrent state (slot-batch via vmap instead)")
+        # xLSTM block state is positionless recurrent state with the batch
+        # axis leading every leaf ([B, nh, ...]) — the batch axis IS the
+        # slot axis, so per_row needs no extra plumbing: the executor
+        # stacks/overwrites rows along axis 0 and the vmapped-over-batch
+        # recurrence keeps rows independent.
         st = []
         for kind in xlstm_block_kinds(cfg):
             init = xlstm_mod.init_slstm_state if kind == "slstm" \

@@ -58,13 +58,9 @@ class Model:
                     dtype=jnp.bfloat16, valid=None,
                     per_row: bool = False) -> Params:
         if self.cfg.is_encdec:
-            if per_row:
-                raise NotImplementedError(
-                    "per-row decode state: enc-dec slots need per-request "
-                    "encoder state (see ROADMAP)")
             return encdec.init_decode_state(self.cfg, self.ctx, params,
                                             batch["frames"], b, max_len,
-                                            dtype, valid)
+                                            dtype, valid, per_row=per_row)
         return transformer.init_decode_state(self.cfg, self.ctx, b, max_len,
                                              dtype, per_row=per_row)
 
@@ -72,11 +68,10 @@ class Model:
                valid=None, *, kv_chunk: int = 1024, last_only: bool = False,
                return_hidden: bool = False):
         if self.cfg.is_encdec:
-            if return_hidden:
-                raise NotImplementedError("fused head: enc-dec unsupported")
             return encdec.decode_step(self.cfg, params, self.ctx, state,
                                       tokens, valid, kv_chunk=kv_chunk,
-                                      last_only=last_only)
+                                      last_only=last_only,
+                                      return_hidden=return_hidden)
         return transformer.decode_step(self.cfg, params, self.ctx, state,
                                        tokens, valid, kv_chunk=kv_chunk,
                                        last_only=last_only,

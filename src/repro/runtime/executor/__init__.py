@@ -1,21 +1,27 @@
 """Batched slot executor: the runtime's one-dispatch-per-round engine.
 
-``slotbatch`` stacks the pool's decode slots into one pytree with per-slot
-KV positions, ``vstep`` compiles the single vectorised decode round (with
-the Pallas fused coded-head fast path), and ``pool`` wraps both in an
-async executor that overlaps host-side admission with device compute and
-measures real round latency. The continuous-batching scheduler drives
-``SlotPoolExecutor`` instead of stepping slots one by one.
+``slotbatch`` stacks the pool's decode slots into one pytree — per-slot
+KV positions for transformers, a per-slot encoder extras bank for
+enc-dec, positionless [B, ...] block state for xLSTM — ``vstep`` compiles
+the single vectorised decode round (with the Pallas fused coded-head fast
+path), and ``pool`` wraps both in an async executor that overlaps
+host-side admission with device compute and measures real round latency.
+The continuous-batching scheduler drives ``SlotPoolExecutor`` for EVERY
+zoo architecture; per-slot sequential stepping survives only as the
+differential-test oracle and the ``--sequential`` escape hatch.
 """
 from repro.runtime.executor.pool import RoundHandle, SlotPoolExecutor
-from repro.runtime.executor.slotbatch import (blank_state, read_slot,
+from repro.runtime.executor.slotbatch import (TRACES, blank_batch,
+                                              blank_state, read_slot,
+                                              request_batch, slot_axis,
                                               stack_states,
                                               supports_slot_batching,
                                               unstack_states, write_slot)
 from repro.runtime.executor.vstep import VStep
 
 __all__ = [
-    "RoundHandle", "SlotPoolExecutor", "VStep",
-    "blank_state", "read_slot", "stack_states", "supports_slot_batching",
+    "RoundHandle", "SlotPoolExecutor", "TRACES", "VStep",
+    "blank_batch", "blank_state", "read_slot", "request_batch",
+    "slot_axis", "stack_states", "supports_slot_batching",
     "unstack_states", "write_slot",
 ]

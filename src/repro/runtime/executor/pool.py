@@ -29,9 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.runtime.executor.slotbatch import (blank_state,
-                                              supports_slot_batching,
-                                              write_slot)
+from repro.runtime.executor.slotbatch import (blank_state, request_batch,
+                                              slot_axis, write_slot)
 from repro.runtime.executor.vstep import VStep
 
 
@@ -53,12 +52,8 @@ class SlotPoolExecutor:
                  use_fused: bool | str = "auto", metrics=None):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
-        if not supports_slot_batching(stepper.model):
-            raise NotImplementedError(
-                f"slot batching unsupported for {stepper.model.cfg.name}: "
-                "needs the per-row KV-cache layout (decoder-only, "
-                "non-xLSTM)")
         self.stepper = stepper
+        self.slot_axis = slot_axis(stepper.model)
         self.n_slots = int(n_slots)
         self.overlap = bool(overlap)
         self.metrics = metrics
@@ -78,16 +73,19 @@ class SlotPoolExecutor:
     def n_active(self) -> int:
         return int(self.active.sum())
 
-    def admit(self, slot: int, prompt, valid, tag: Any = None) -> int:
+    def admit(self, slot: int, prompt, valid, tag: Any = None,
+              extras: dict | None = None) -> int:
         """Prefill ``prompt`` into ``slot`` (a fresh per-row batch-1 state
         written over the stacked row — no recompile) and activate it.
         Returns the first generated token. ``tag`` identifies the occupant
-        in harvested (slot, tag, token) triples."""
-        tokens = np.asarray(prompt, np.int32)[None, :]
-        logits, row = self.stepper.prefill({"tokens": tokens}, valid,
-                                           per_row=True)
+        in harvested (slot, tag, token) triples. ``extras`` carries
+        per-request batch inputs (enc-dec ``frames``): the encoder runs
+        for this request and its cross-KV lands in the slot's row of the
+        stacked extras bank."""
+        logits, row = self.stepper.prefill(request_batch(prompt, extras),
+                                           valid, per_row=True)
         tok = self.stepper.greedy(logits)                     # [1, 1]
-        self.state = write_slot(self.state, slot, row)
+        self.state = write_slot(self.state, slot, row, axis=self.slot_axis)
         self.last_toks = self.last_toks.at[slot].set(tok[0])
         self.active[slot] = True
         self.tags[slot] = tag

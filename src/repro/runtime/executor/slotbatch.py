@@ -2,71 +2,136 @@
 
 The scheduler's decode slots used to be independent batch-1 states, stepped
 one `jax.jit` dispatch each. Here they live as ONE stacked pytree whose
-batch axis IS the slot axis: every non-xLSTM decode-state leaf is laid out
-``[L(layers), B(slots), ...]`` (``init_decode_state`` vmaps the per-layer
-init over layers, so layers lead and the batch rides second). With the
-per-row cache layout (``attention.init_cache(per_row=True)``) each row
-carries its own KV length/positions, so rows decode at independent
-positions inside a single dispatch, and slot admission overwrites one row
-in place — same shapes every time, never a recompile.
+batch axis IS the slot axis. Two layouts cover the whole model zoo:
+
+  * transformer / enc-dec: every decode-state leaf is laid out
+    ``[L(layers), B(slots), ...]`` (``init_decode_state`` vmaps the
+    per-layer init over layers, so layers lead and the batch rides
+    second) — ``SLOT_AXIS == 1``. With the per-row cache layout
+    (``attention.init_cache(per_row=True)``) each row carries its own KV
+    length/positions, so rows decode at independent positions inside a
+    single dispatch. Enc-dec states additionally carry the per-slot
+    *extras bank*: the encoder-derived cross-attention K/V
+    (``[L, B, Se, Hkv, hd]``) plus per-row cross positions
+    (``[L, B, Se]``) — written row-wise by ``write_slot`` at admission
+    (the encoder re-runs per request), so whisper slots consume their own
+    encoder context inside the stacked layout. The bank stores DECODED
+    (r-independent) values, so a planner ``set_code_r`` keeps it valid;
+    the 2MR requeue path re-admits and therefore re-encodes it.
+  * xLSTM: block state is positionless recurrent state whose leaves are
+    ``[B(slots), ...]`` — the batch axis already leads (``slot axis 0``),
+    no per-row position plumbing needed; the recurrence is independent
+    per row, so stacking slots is exactly a vmap over the block state.
+
+Slot admission overwrites one row in place with a traced index — same
+shapes every time, never a recompile (``TRACES`` counts actual retraces;
+the property tests pin it at one per state structure).
 """
 from __future__ import annotations
 
+import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-# every stacked decode-state leaf is [L, B, ...]: slots live on axis 1
+# default stacked layout: [L, B, ...] decode-state leaves, slots on axis 1
 SLOT_AXIS = 1
+
+# jit retrace counters (incremented at TRACE time only): the slot-isolation
+# property tests assert admission into any slot of a warm bank reuses one
+# compiled program per (structure, shapes, axis)
+TRACES = {"write": 0, "read": 0}
+
+
+def slot_axis(model) -> int:
+    """Which leaf axis indexes slots for this family: 0 for xLSTM (block
+    state has no leading layer axis), 1 ([L, B, ...]) for everything
+    else."""
+    return 0 if model.cfg.ssm_kind == "xlstm" else 1
 
 
 def supports_slot_batching(model) -> bool:
-    """Slot batching needs the per-row KV-cache layout: decoder-only,
-    non-xLSTM families (enc-dec slots need per-request encoder state and
-    xLSTM carries positionless recurrent block state — see ROADMAP)."""
-    cfg = model.cfg
-    return not cfg.is_encdec and cfg.ssm_kind != "xlstm"
+    """Every zoo family slot-batches: decoder-only via per-row KV
+    positions, enc-dec via the per-slot extras bank (per-request encoder
+    state in the stacked layout), xLSTM via its positionless [B, ...]
+    block state. Kept as an API point for the scheduler's auto mode."""
+    return True
+
+
+def blank_batch(model, n: int) -> dict:
+    """Zero-filled per-request inputs shaping an all-empty pool (enc-dec:
+    zero frames size the extras bank; real per-request frames land at
+    admission)."""
+    if model.cfg.is_encdec:
+        return {"frames": jnp.zeros((n, model.cfg.enc_seq,
+                                     model.cfg.d_model), jnp.float32)}
+    return {}
+
+
+def request_batch(prompt, extras: dict | None = None) -> dict:
+    """One request's prefill batch: [1, S] tokens plus per-request extras
+    broadcast to batch-1 leaves. The SINGLE layout both executors share —
+    the sequential oracle and the batched admission path must not drift
+    on exactly the shape the differential tests pin."""
+    batch = {"tokens": np.asarray(prompt, np.int32)[None, :]}
+    for key, val in (extras or {}).items():
+        batch[key] = np.asarray(val)[None, ...]
+    return batch
 
 
 def blank_state(stepper, n_slots: int) -> Any:
-    """A fresh stacked per-row decode state with ``n_slots`` rows."""
-    return stepper.model.init_decode(stepper.params, {}, n_slots,
-                                     stepper.max_len, stepper.cache_dtype,
-                                     per_row=True)
+    """A fresh stacked per-row decode state with ``n_slots`` rows.
+
+    Built from ``eval_shape`` (zero device compute): admission overwrites
+    a row WHOLESALE via ``write_slot`` before it is ever read, so only the
+    shapes/dtypes matter — running the real init (for enc-dec, a full
+    encoder forward over zeros per executor construction) would be pure
+    waste. Never-admitted rows step through decode harmlessly, exactly as
+    they did with the real init values."""
+    shapes = jax.eval_shape(
+        lambda p, b: stepper.model.init_decode(
+            p, b, n_slots, stepper.max_len, stepper.cache_dtype,
+            per_row=True),
+        stepper.params, blank_batch(stepper.model, n_slots))
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
 
 
-def stack_states(states: list[Any]) -> Any:
+def stack_states(states: list[Any], axis: int = SLOT_AXIS) -> Any:
     """Concatenate batch-1 per-row states along the slot axis."""
     return jax.tree.map(
-        lambda *xs: jnp.concatenate(xs, axis=SLOT_AXIS), *states)
+        lambda *xs: jnp.concatenate(xs, axis=axis), *states)
 
 
-@jax.jit
-def _write_row(stacked, row, idx):
+@functools.partial(jax.jit, static_argnames="axis")
+def _write_row(stacked, row, idx, *, axis):
+    TRACES["write"] += 1
     return jax.tree.map(
         lambda s, x: jax.lax.dynamic_update_slice_in_dim(
-            s, x.astype(s.dtype), idx, axis=SLOT_AXIS), stacked, row)
+            s, x.astype(s.dtype), idx, axis=axis), stacked, row)
 
 
-def write_slot(stacked: Any, idx, row: Any) -> Any:
+def write_slot(stacked: Any, idx, row: Any, axis: int = SLOT_AXIS) -> Any:
     """Write a (batch-1, per-row) state into slot ``idx`` of the stacked
     state. ``idx`` is traced, so admission into ANY slot reuses one
     compiled program — no shape change, no recompile."""
-    return _write_row(stacked, row, jnp.asarray(idx, jnp.int32))
+    return _write_row(stacked, row, jnp.asarray(idx, jnp.int32), axis=axis)
 
 
-@jax.jit
-def _read_row(stacked, idx):
+@functools.partial(jax.jit, static_argnames="axis")
+def _read_row(stacked, idx, *, axis):
+    TRACES["read"] += 1
     return jax.tree.map(
-        lambda s: jax.lax.dynamic_slice_in_dim(s, idx, 1, axis=SLOT_AXIS),
+        lambda s: jax.lax.dynamic_slice_in_dim(s, idx, 1, axis=axis),
         stacked)
 
 
-def read_slot(stacked: Any, idx) -> Any:
+def read_slot(stacked: Any, idx, axis: int = SLOT_AXIS) -> Any:
     """Slice slot ``idx`` back out as a batch-1 per-row state."""
-    return _read_row(stacked, jnp.asarray(idx, jnp.int32))
+    return _read_row(stacked, jnp.asarray(idx, jnp.int32), axis=axis)
 
 
-def unstack_states(stacked: Any, n_slots: int) -> list[Any]:
-    return [read_slot(stacked, i) for i in range(n_slots)]
+def unstack_states(stacked: Any, n_slots: int,
+                   axis: int = SLOT_AXIS) -> list[Any]:
+    return [read_slot(stacked, i, axis=axis) for i in range(n_slots)]

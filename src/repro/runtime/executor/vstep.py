@@ -1,11 +1,13 @@
 """One jitted, vectorised decode round over the stacked slot state.
 
-The whole slot pool advances one token in a SINGLE device dispatch: the
-per-row KV positions inside the stacked state let every slot attend at its
-own offset, and the health controller's validity mask is broadcast into
-every coded GEMM of the round, so an in-budget erasure is recovered
-in-step for all slots at once (the paper's close-to-zero recovery, now a
-pool-level property).
+The whole slot pool advances one token in a SINGLE device dispatch for
+EVERY zoo family: per-row KV positions let transformer slots attend at
+their own offsets, the enc-dec extras bank gives each whisper slot its
+own cross-attention context, and xLSTM rows advance their positionless
+block state independently. The health controller's validity mask is
+broadcast into every coded GEMM of the round, so an in-budget erasure is
+recovered in-step for all slots at once (the paper's close-to-zero
+recovery, now a pool-level property).
 
 Two compiled variants exist, both traced exactly once:
 
@@ -31,9 +33,10 @@ from repro.kernels import ops
 
 
 def _fused_supported(stepper) -> bool:
-    cfg = stepper.model.cfg
-    return (stepper.coded and not cfg.is_encdec
-            and cfg.ssm_kind != "xlstm"
+    # arch-agnostic: every zoo family's decode exposes return_hidden and
+    # ends in the same coded LM head, so the fused kernel only needs the
+    # sum-parity generator row it consumes
+    return (stepper.coded
             and bool(np.allclose(stepper.model.ctx.spec.code.generator[0],
                                  1.0)))
 

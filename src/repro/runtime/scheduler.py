@@ -24,10 +24,12 @@ steady-state properties of a request STREAM:
     (``RuntimeMetrics.round_ms``).
 
 Execution: by default the slot pool lives in a ``SlotPoolExecutor`` — one
-stacked state with per-slot KV positions, ONE jitted dispatch per round
-for the whole pool, optional host/device overlap. Models without the
-per-row cache layout (enc-dec, xLSTM) or ``batched=False`` fall back to
-the original sequential per-slot stepping over batch-1 states.
+stacked state (per-slot KV positions; enc-dec adds the per-slot encoder
+extras bank; xLSTM stacks its positionless block state), ONE jitted
+dispatch per round for the whole pool, optional host/device overlap —
+for EVERY zoo architecture. ``batched=False`` keeps the original
+sequential per-slot stepping over batch-1 states as the
+differential-test oracle and ``--sequential`` escape hatch.
 """
 from __future__ import annotations
 
@@ -41,7 +43,7 @@ import numpy as np
 from repro.core.failure import StragglerModel, request_latency
 from repro.core.seeds import stream_rng
 from repro.runtime.clock import Clock, SimClock
-from repro.runtime.executor import (SlotPoolExecutor,
+from repro.runtime.executor import (SlotPoolExecutor, request_batch,
                                     supports_slot_batching)
 from repro.runtime.health import HealthAction, ShardHealthController
 from repro.runtime.metrics import RuntimeMetrics
@@ -137,14 +139,9 @@ class ContinuousBatchingScheduler:
         not lie in the future. ``deadline_ms``/``priority`` bend the
         admission order (earliest deadline / highest priority first); a
         full queue sheds the worst-ordered request. ``extras`` carries
-        unbatched per-request batch fields (enc-dec ``frames``) — only
-        the sequential slot path threads them into prefill, so they are
-        rejected on the batched executor rather than silently ignored."""
-        if extras and self.executor is not None:
-            raise ValueError(
-                "extras are only supported on the sequential slot path "
-                "(enc-dec fallback); this model runs the batched executor "
-                "— pass RuntimeConfig(batched=False) to use them")
+        per-request batch fields (enc-dec ``frames``): both executors
+        thread them into prefill — the batched path writes the resulting
+        encoder state into the slot's row of the stacked extras bank."""
         now = self.clock.now()
         arrival = now if arrival_ms is None else min(float(arrival_ms), now)
         req = Request(self._next_rid, np.asarray(prompt, np.int32),
@@ -227,13 +224,11 @@ class ContinuousBatchingScheduler:
             req.admitted_ms = now
             if self.executor is not None:
                 tok = self.executor.admit(slot.idx, req.prompt, mask,
-                                          tag=req.rid)
+                                          tag=req.rid, extras=req.extras)
                 slot.request = req
             else:
-                batch = {"tokens": req.prompt[None, :]}
-                for key, val in (req.extras or {}).items():
-                    batch[key] = np.asarray(val)[None, ...]
-                logits, state = self.stepper.prefill(batch, mask)
+                logits, state = self.stepper.prefill(
+                    request_batch(req.prompt, req.extras), mask)
                 t = self.stepper.greedy(logits)
                 slot.request, slot.state, slot.last_tok = req, state, t
                 tok = int(np.asarray(t)[0, 0])
@@ -353,10 +348,11 @@ class ContinuousBatchingScheduler:
 
 
 def run_arrivals(sched: ContinuousBatchingScheduler,
-                 arrivals: list[tuple[float, Any, int]]) -> list[Request]:
+                 arrivals: list[tuple]) -> list[Request]:
     """Drive a timed workload: ``arrivals`` is [(time_ms, prompt,
-    max_new_tokens)]. Requests are submitted when the (simulated) clock
-    reaches their arrival time; idle gaps fast-forward the clock."""
+    max_new_tokens)] with an optional 4th ``extras`` dict per entry
+    (enc-dec ``frames``). Requests are submitted when the (simulated)
+    clock reaches their arrival time; idle gaps fast-forward the clock."""
     pending = deque(sorted(arrivals, key=lambda a: a[0]))
     rounds = 0
     while pending or sched.busy:
@@ -365,8 +361,9 @@ def run_arrivals(sched: ContinuousBatchingScheduler,
                 isinstance(sched.clock, SimClock):
             sched.clock.advance_to(pending[0][0])
         while pending and pending[0][0] <= sched.clock.now():
-            t, prompt, n = pending.popleft()
-            sched.submit(prompt, n, arrival_ms=t)
+            t, prompt, n, *rest = pending.popleft()
+            sched.submit(prompt, n, arrival_ms=t,
+                         extras=rest[0] if rest else None)
         sched.step()
         rounds += 1
         if rounds > sched.rcfg.max_rounds:

@@ -156,8 +156,9 @@ class ServingEngine:
     ``generate`` DELEGATES to the batched ``SlotPoolExecutor`` (every
     batch row becomes a slot, rounds are one dispatch) so this deprecated
     entry point exercises the exact same hot path as the runtime and
-    cannot silently diverge from it; models without the per-row cache
-    layout (enc-dec, xLSTM) fall back to the sequential stepper loop.
+    cannot silently diverge from it — for every zoo family, enc-dec and
+    xLSTM included. ``_generate_sequential`` remains as the
+    differential-test oracle.
     """
 
     def __init__(self, model: Model, params, scfg: ServeConfig):
@@ -197,11 +198,10 @@ class ServingEngine:
         """Greedy generation; ``fail_at`` maps step -> shard to kill mid-
         request (the paper's Case Study II: performance unchanged)."""
         # deferred import: repro.runtime imports this module for the stepper
-        from repro.runtime.executor import (SlotPoolExecutor,
-                                            supports_slot_batching)
-        if not supports_slot_batching(self.model):
-            return self._generate_sequential(batch, n_tokens, fail_at)
+        from repro.runtime.executor import SlotPoolExecutor
         tokens = np.asarray(batch["tokens"])
+        extras_all = {k: np.asarray(v) for k, v in batch.items()
+                      if k != "tokens"}
         b = tokens.shape[0]
         ex = self._executors.get(b)
         if ex is None:
@@ -213,7 +213,9 @@ class ServingEngine:
             ex.evict_all()
         out = np.zeros((b, n_tokens), np.int64)
         for i in range(b):
-            out[i, 0] = ex.admit(i, tokens[i], self.valid, tag=i)
+            extras = {k: v[i] for k, v in extras_all.items()} or None
+            out[i, 0] = ex.admit(i, tokens[i], self.valid, tag=i,
+                                 extras=extras)
         for t in range(n_tokens - 1):
             if fail_at and t in fail_at:
                 self.inject_failure(fail_at[t])
@@ -224,7 +226,8 @@ class ServingEngine:
 
     def _generate_sequential(self, batch: dict, n_tokens: int,
                              fail_at: dict[int, int] | None) -> np.ndarray:
-        """Sequential fallback for families the executor can't slot-batch."""
+        """Sequential per-slot stepping — the differential-test oracle the
+        batched path is pinned against (no longer a production path)."""
         logits, state = self.prefill(batch)
         tok = self.stepper.greedy(logits)
         out = [tok]

@@ -168,14 +168,6 @@ def test_permanent_death_resumes_churn_after_replica_swap():
         "replaced hardware must experience faults again"
 
 
-def test_extras_rejected_on_batched_executor(coded):
-    cfg, stepper = coded
-    sched = ContinuousBatchingScheduler(stepper, RuntimeConfig(n_slots=1))
-    assert sched.executor is not None
-    with pytest.raises(ValueError, match="sequential"):
-        sched.submit(np.arange(4), 2, extras={"frames": np.zeros((2, 2))})
-
-
 def test_churn_trace_stays_in_budget():
     rec = churn_trace(4, 0.0, 1000.0, period_ms=100.0, down_ms=40.0,
                       concurrent=2)

@@ -207,13 +207,15 @@ def test_idle_gap_fast_forwards_clock(coded):
     assert sched.metrics.counters["requests_completed"] == 2
 
 
-# ------------------------------------------- enc-dec sequential fallback ----
+# --------------------------------------------- enc-dec batched executor ----
 
-def test_encdec_fallback_heals_and_reencodes_on_midrun_failure():
-    """ROADMAP open item pin: enc-dec (whisper) slots fall back to
-    sequential stepping — a mid-run in-budget erasure must recover
-    in-step and a beyond-budget failure must still requeue + heal +
-    re-encode, with tokens identical to the fault-free stream."""
+def test_encdec_batched_heals_and_reencodes_on_midrun_failure():
+    """PR 4 pinned this on the sequential fallback; enc-dec now rides the
+    BATCHED executor: a mid-run in-budget erasure must recover in-step
+    and a beyond-budget failure must still requeue + heal + re-encode
+    (the 2MR re-admission re-runs the encoder, re-encoding the slot's
+    extras-bank row), tokens identical to the fault-free stream — and the
+    whole run replays bit-exact under the core.seeds root seed."""
     cfg = smoke_config(get_arch("whisper-medium"))
     model = build(cfg, TPCtx(tp=4, mode="coded", code_r=2, moe_capacity=0))
     params = model.init(jax.random.PRNGKey(0))
@@ -223,9 +225,10 @@ def test_encdec_fallback_heals_and_reencodes_on_midrun_failure():
     frames = rng.normal(size=(cfg.enc_seq, cfg.d_model)).astype(np.float32)
     prompts = _prompts(cfg, 3)
 
-    def serve(events):
-        sched = _sched(stepper, n_slots=2, events=events)
-        assert sched.executor is None, "enc-dec must use sequential slots"
+    def serve(events, seed=0):
+        sched = _sched(stepper, n_slots=2, events=events, seed=seed)
+        assert sched.executor is not None, \
+            "enc-dec must run the batched executor by default"
         for i, p in enumerate(prompts):
             sched.submit(p, GEN, extras={"frames": frames})
         done = sched.run()
@@ -234,14 +237,15 @@ def test_encdec_fallback_heals_and_reencodes_on_midrun_failure():
     s_ok, toks_ok = serve([])
     assert len(toks_ok) == 3
 
-    # in-budget: shard dies mid-decode, CDC recovers in-step
+    # in-budget: shard dies mid-decode, CDC recovers in-step pool-wide
     s_cdc, toks_cdc = serve([erasure(2.0, 1)])
     assert toks_cdc == toks_ok
     assert s_cdc.metrics.counters["erasures_recovered"] == 1
     assert s_cdc.metrics.counters["beyond_budget_failures"] == 0
 
     # beyond budget: 2nd concurrent erasure takes the 2MR fallback —
-    # requeue in-flight, swap the replica in, re-encode parity
+    # requeue in-flight, swap the replica in, re-encode parity (and the
+    # extras bank, via re-admission)
     s_2mr, toks_2mr = serve([erasure(2.0, 1), erasure(3.0, 2)])
     c = s_2mr.metrics.counters
     assert toks_2mr == toks_ok, "a request was lost or corrupted"
@@ -250,6 +254,23 @@ def test_encdec_fallback_heals_and_reencodes_on_midrun_failure():
     assert c["shards_healed"] >= 2
     assert c["parity_reencodes"] >= 1
     assert s_2mr.health.mask.all(), "replica swap must heal all shards"
+
+    # bit-exact replay from one root seed (measured wall-clock excluded)
+    s_a, toks_a = serve([erasure(2.0, 1), erasure(3.0, 2)], seed=7)
+    s_b, toks_b = serve([erasure(2.0, 1), erasure(3.0, 2)], seed=7)
+    assert toks_a == toks_b == toks_ok
+    snap_a, snap_b = s_a.metrics.snapshot(), s_b.metrics.snapshot()
+    snap_a.pop("round_latency_measured")
+    snap_b.pop("round_latency_measured")
+    assert snap_a == snap_b
+
+    # the sequential oracle agrees across the same schedules
+    seq = _sched(stepper, n_slots=2, batched=False,
+                 events=[erasure(2.0, 1), erasure(3.0, 2)])
+    for p in prompts:
+        seq.submit(p, GEN, extras={"frames": frames})
+    toks_seq = {r.rid: r.tokens for r in seq.run()}
+    assert toks_seq == toks_ok
 
 
 # --------------------------------------------- health controller (pure) ----
