@@ -88,6 +88,10 @@ def _run(stepper, workload, trace, *, seed: int, adapt: bool = False,
         "planner": snap["planner"],
         "elapsed_ms": snap["elapsed_ms"],
         "request_latency": snap["request_latency"],
+        "ttft": snap["ttft"],
+        # per-shard health timeline: exact unavailability duty cycles the
+        # planner's per-round sampling approximates
+        "shard_timeline": sched.shardlog.snapshot(sched.clock.now()),
     }
 
 
@@ -112,7 +116,8 @@ def churn_section(cfg, args) -> dict:
     out = {
         "trace_events": len(trace),
         "coded": {k: faulty[k] for k in
-                  ("completed_all", "counters", "request_latency")},
+                  ("completed_all", "counters", "request_latency",
+                   "ttft", "shard_timeline")},
         "coded_tokens_match_fault_free":
             faulty["tokens"] == baseline["tokens"],
         "uncoded": {k: uncoded_faulty[k] for k in
@@ -180,6 +185,7 @@ def adaptive_section(cfg, args) -> dict:
         "max_planned_budget": max(
             (p["budget"] for p in res["planner"]["plans"]), default=0),
         "counters": res["counters"],
+        "shard_timeline": res["shard_timeline"],
     }
     assert out["completed_all"], "adaptive run lost a request"
     assert out["raised_during_storm"], f"planner never raised r: {series}"

@@ -117,6 +117,7 @@ def executor_comparison(cfg, workload, common: dict) -> dict:
             "wall_s": snap["wall_s"],
             "decode_rounds": snap["counters"]["decode_rounds"],
             "round_latency_measured": snap["round_latency_measured"],
+            "ttft": snap["ttft"],
             "completed_all": snap["completed_all"],
         }
     seq, bat = out["sequential"], out["batched"]
@@ -159,6 +160,8 @@ def run() -> list[dict]:
             "completed_all": snap["completed_all"],
             "requests_requeued": snap["counters"]["requests_requeued"],
             "p99_latency_ms": snap["request_latency"].get("p99_ms"),
+            "p50_ttft_ms": snap["ttft"].get("p50_ms"),
+            "p99_ttft_ms": snap["ttft"].get("p99_ms"),
             "rounds_per_s": snap["rounds_per_s"],
         })
     assert rows[0]["completed_all"], "coded runtime lost a request"

@@ -46,6 +46,14 @@ def attach_chaos(sched, injector):
         for ev in injector.events_until(now):
             s.health.schedule(ev)
             s.metrics.count("faults_injected")
+            if s.tracer.enabled:
+                # one fault.inject per injected event; the scheduler's
+                # health handling emits its resolution (fault.recovered /
+                # fault.beyond_budget / fault.noop) when the event applies
+                s.tracer.emit(
+                    "fault.inject",
+                    track=f"shard:{ev.shard}" if ev.shard >= 0 else "rounds",
+                    t_ms=ev.time_ms, fault=ev.kind.value, shard=ev.shard)
     sched.round_hooks.append(hook)
     return hook
 

@@ -198,6 +198,9 @@ def apply_plan(sched, plan: RedundancyPlan) -> bool:
     health.set_budget(stepper.erasure_budget)
     sched.metrics.count("replans")
     sched.metrics.count("parity_reencodes")
+    shardlog = getattr(sched, "shardlog", None)
+    if shardlog is not None:     # a resize re-encodes parity offline too
+        shardlog.on_reencode(sched.clock.now())
     return True
 
 
@@ -214,5 +217,9 @@ def attach_planner(sched, planner: AdaptiveRedundancyPlanner):
         if plan is not None:
             applied = apply_plan(s, plan)
             s.metrics.observe_plan(plan.as_dict(), applied)
+            if s.tracer.enabled:
+                d = plan.as_dict()
+                s.tracer.emit("planner.plan", track="planner",
+                              t_ms=d.pop("t_ms"), applied=applied, **d)
     sched.round_hooks.append(hook)
     return hook

@@ -47,6 +47,8 @@ from repro.faults import (AdaptiveRedundancyPlanner, InjectedLatency,
                           LatencySpec, PlannerConfig, attach_chaos,
                           attach_planner, measured_stall_hook, parse_chaos)
 from repro.models import TPCtx, build
+from repro.obs import (FlightRecorder, MetricsServer, validate_chrome_trace,
+                       write_chrome_trace)
 from repro.runtime import (ContinuousBatchingScheduler, RuntimeConfig,
                            ShardHealthController, erasure, run_arrivals)
 from repro.serve import ModelStepper, ServeConfig, ServingEngine
@@ -116,6 +118,14 @@ def main():
     ap.add_argument("--seed", type=int, default=0,
                     help="root seed: stragglers, injector, and injected "
                          "latency all derive from it (bit-exact replay)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record the flight recorder and write a "
+                         "Perfetto/Chrome trace_event JSON (open it at "
+                         "https://ui.perfetto.dev)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve live Prometheus text metrics at "
+                         "/metrics (and the trace at /trace) on this "
+                         "port; 0 binds an ephemeral port")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -144,8 +154,16 @@ def main():
     if args.chaos:
         injector = parse_chaos(args.chaos, stepper.n_shards, seed=args.seed)
         latency = InjectedLatency(LatencySpec(), injector, seed=args.seed)
+    tracer = FlightRecorder() \
+        if args.trace or args.metrics_port is not None else None
     sched = ContinuousBatchingScheduler(stepper, rcfg, health=health,
-                                        latency=latency)
+                                        latency=latency, tracer=tracer)
+    server = None
+    if args.metrics_port is not None:
+        server = MetricsServer(sched.metrics, sched.shardlog, tracer,
+                               sched.clock, port=args.metrics_port).start()
+        print(f"metrics: http://127.0.0.1:{server.port}/metrics "
+              f"(live trace: /trace)")
     if injector is not None:
         attach_chaos(sched, injector)
         if sched.executor is not None:
@@ -198,6 +216,18 @@ def main():
         series = [(p["t_ms"], p["r"]) for p in sched.metrics.plan_log]
         print(f"planner: r series {series} "
               f"(replans: {sched.metrics.counters['replans']})")
+    if args.trace:
+        trace = write_chrome_trace(
+            args.trace, tracer, sched.shardlog, now_ms=sched.clock.now(),
+            meta={"arch": args.arch, "seed": args.seed,
+                  "chaos": args.chaos or "", "adapt_r": args.adapt_r})
+        stats = validate_chrome_trace(trace)
+        print(f"trace: wrote {args.trace} ({stats['n_events']} events on "
+              f"{stats['n_tracks']} tracks; "
+              f"{stats['n_injected_erasures']} injected erasures, all "
+              f"linked to a resolution)")
+    if server is not None:
+        server.stop()
     print(sched.metrics.to_json())
     if args.coded:
         print("straggler model (first-T-of-T+r):",

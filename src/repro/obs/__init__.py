@@ -1,0 +1,27 @@
+"""Flight-recorder observability for the coded runtime.
+
+Three pieces, wired through the whole serving stack:
+
+  * ``tracer`` — structured, SimClock+wall-clock dual-stamped events in a
+    bounded ring buffer (request/round/fault/planner lifecycles), with a
+    one-branch no-op fast path when tracing is off;
+  * ``export`` — Perfetto/Chrome ``trace_event`` JSON export (one track
+    per shard, per slot, one for rounds/requests/planner), trace
+    validation (every injected fault linked to its recovery), Prometheus
+    text exposition, and a live ``/metrics`` server;
+  * ``shardlog`` — per-shard health timeline (mask transitions,
+    erasure/heal counts, unavailability duty cycles) observed directly
+    from ``ShardHealthController``.
+"""
+from repro.obs.export import (MetricsServer, chrome_trace, prometheus_text,
+                              validate_chrome_trace, write_chrome_trace)
+from repro.obs.shardlog import ShardTimeline
+from repro.obs.tracer import (EVENT_KINDS, NULL_RECORDER, FlightRecorder,
+                              TraceEvent)
+
+__all__ = [
+    "EVENT_KINDS", "FlightRecorder", "NULL_RECORDER", "TraceEvent",
+    "ShardTimeline",
+    "MetricsServer", "chrome_trace", "prometheus_text",
+    "validate_chrome_trace", "write_chrome_trace",
+]

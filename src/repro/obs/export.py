@@ -1,0 +1,328 @@
+"""Exporters for the flight recorder: Perfetto/Chrome trace JSON and
+Prometheus text-format metrics, plus a tiny live exposition server.
+
+Chrome ``trace_event`` format (loadable at https://ui.perfetto.dev or
+chrome://tracing): one process ("repro.runtime"), one thread per track —
+``requests``, ``rounds``, ``planner``, one per decode slot
+(``slot:<i>``), one per coded shard (``shard:<i>``). Timestamps are the
+runtime's SIMULATED clock in microseconds (deterministic, so a replayed
+chaos run exports a byte-identical trace modulo wall fields); the wall
+stamps ride along in each event's ``args`` under ``wall_*`` keys.
+``ShardTimeline`` down-intervals render as red-able "down" slices on the
+shard tracks, so per-shard unavailability is visible at a glance.
+
+``validate_chrome_trace`` is the schema + causality checker CI runs on
+every traced chaos artifact: structural validity (required keys, known
+phases, non-negative spans) and the paper's recovery claim as a trace
+property — EVERY ``fault.inject`` erasure must be resolved by a matching
+``fault.recovered`` (in-step CDC), a ``fault.beyond_budget`` followed by
+the ``shard.heal_all`` + ``code.reencode`` 2MR chain, or an explicit
+``fault.noop`` (duplicate report of an already-dead shard).
+
+``prometheus_text`` renders ``RuntimeMetrics`` (counters -> ``_total``
+counters, bounded histograms -> ``_bucket/_sum/_count`` series) plus
+per-shard duty-cycle gauges; ``MetricsServer`` serves it at
+``/metrics`` (and the live trace at ``/trace``) from a daemon thread —
+``launch/serve.py --metrics-port`` wires it up.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any
+
+from repro.obs.tracer import FlightRecorder
+
+_PROCESS = "repro.runtime"
+_KNOWN_PHASES = {"X", "i", "I", "M", "b", "e", "n", "s", "t", "f", "C"}
+
+
+# ---------------------------------------------------------- chrome trace ----
+
+def _track_order(tracks: list[str]) -> list[str]:
+    """Stable display order: requests, rounds, planner, slots, shards."""
+    def key(t: str):
+        head, _, idx = t.partition(":")
+        fixed = {"requests": 0, "rounds": 1, "planner": 2,
+                 "slot": 3, "shard": 4}
+        return (fixed.get(head, 5), int(idx) if idx.isdigit() else 0, t)
+    return sorted(set(tracks), key=key)
+
+
+def chrome_trace(recorder: FlightRecorder, shardlog=None,
+                 now_ms: float | None = None,
+                 meta: dict | None = None) -> dict:
+    """Serialise the recorder (and optional shard timeline) as a Chrome
+    ``trace_event`` JSON object."""
+    events = recorder.events()
+    tracks = [e.track for e in events]
+    if shardlog is not None:
+        tracks += [f"shard:{i}" for i in range(shardlog.n_shards)]
+    order = _track_order(tracks)
+    tid = {t: i + 1 for i, t in enumerate(order)}
+
+    out: list[dict] = [{
+        "name": "process_name", "ph": "M", "pid": 1, "tid": 0,
+        "args": {"name": _PROCESS},
+    }]
+    for t in order:
+        out.append({"name": "thread_name", "ph": "M", "pid": 1,
+                    "tid": tid[t], "args": {"name": t}})
+        out.append({"name": "thread_sort_index", "ph": "M", "pid": 1,
+                    "tid": tid[t], "args": {"sort_index": tid[t]}})
+
+    for e in events:
+        args = dict(e.args)
+        args["wall_ms"] = e.wall_ms
+        if e.wall_dur_ms:
+            args["wall_dur_ms"] = e.wall_dur_ms
+        for k, v in e.wall_args.items():
+            args[f"wall_{k}"] = v
+        rec = {
+            "name": e.kind,
+            "cat": e.kind.split(".", 1)[0],
+            "pid": 1,
+            "tid": tid[e.track],
+            "ts": e.t_ms * 1e3,          # trace_event wants microseconds
+            "args": args,
+        }
+        if e.dur_ms > 0:
+            rec["ph"], rec["dur"] = "X", e.dur_ms * 1e3
+        else:
+            rec["ph"], rec["s"] = "i", "t"
+        out.append(rec)
+
+    if shardlog is not None:
+        for shard, t0, t1, cause in shardlog.all_intervals(now_ms):
+            out.append({
+                "name": "down", "cat": "health", "ph": "X", "pid": 1,
+                "tid": tid[f"shard:{shard}"], "ts": t0 * 1e3,
+                "dur": max(t1 - t0, 0.0) * 1e3,
+                "args": {"shard": shard, "healed_by": cause},
+            })
+
+    return {
+        "traceEvents": out,
+        "displayTimeUnit": "ms",
+        "otherData": {
+            "exporter": "repro.obs",
+            "clock": "simulated-ms (wall stamps in args.wall_*)",
+            "n_events": len(events),
+            "dropped_events": recorder.dropped,
+            **(meta or {}),
+        },
+    }
+
+
+def write_chrome_trace(path: str, recorder: FlightRecorder, shardlog=None,
+                       now_ms: float | None = None,
+                       meta: dict | None = None) -> dict:
+    trace = chrome_trace(recorder, shardlog, now_ms, meta)
+    with open(path, "w") as f:
+        json.dump(trace, f, indent=1, sort_keys=True)
+    return trace
+
+
+# ------------------------------------------------------------ validation ----
+
+def validate_chrome_trace(trace: Any, require_fault_links: bool = False
+                          ) -> dict:
+    """Structural + causal validation; raises ``ValueError`` on the first
+    violation, returns summary stats otherwise. With
+    ``require_fault_links=True`` the trace must contain at least one
+    injected fault AND every injected erasure must be linked to its
+    resolution (the CI chaos artifact contract)."""
+    if not isinstance(trace, dict) or "traceEvents" not in trace:
+        raise ValueError("trace must be a dict with a traceEvents list")
+    events = trace["traceEvents"]
+    if not isinstance(events, list):
+        raise ValueError("traceEvents must be a list")
+    names: dict[int, str] = {}
+    for i, e in enumerate(events):
+        for key in ("name", "ph", "pid", "tid"):
+            if key not in e:
+                raise ValueError(f"event {i} missing {key!r}: {e}")
+        if e["ph"] not in _KNOWN_PHASES:
+            raise ValueError(f"event {i} has unknown phase {e['ph']!r}")
+        if e["ph"] == "M":
+            if e["name"] == "thread_name":
+                names[e["tid"]] = e["args"]["name"]
+            continue
+        if "ts" not in e:
+            raise ValueError(f"event {i} missing ts: {e}")
+        if e["ts"] < 0:
+            raise ValueError(f"event {i} has negative ts: {e}")
+        if e["ph"] == "X" and e.get("dur", 0) < 0:
+            raise ValueError(f"event {i} has negative dur: {e}")
+        if e["tid"] not in names and e["tid"] != 0:
+            raise ValueError(f"event {i} on unnamed track tid={e['tid']}")
+
+    injected = [e for e in events if e["name"] == "fault.inject"]
+    erasures = [e for e in injected if e["args"].get("fault") == "erasure"]
+
+    def _after(name: str, ts: float, shard: int | None = None):
+        return [e for e in events
+                if e["name"] == name and e["ts"] >= ts
+                and (shard is None or e["args"].get("shard") == shard)]
+
+    linked = 0
+    for f in erasures:
+        ts, shard = f["ts"], f["args"]["shard"]
+        if _after("fault.recovered", ts, shard) or _after("fault.noop",
+                                                          ts, shard):
+            linked += 1
+            continue
+        beyond = _after("fault.beyond_budget", ts)
+        if beyond and _after("shard.heal_all", beyond[0]["ts"]) \
+                and _after("code.reencode", beyond[0]["ts"]):
+            linked += 1
+            continue
+        raise ValueError(
+            f"injected erasure on shard {shard} at ts={ts} has no "
+            "recovery/requeue-heal-reencode/noop resolution in the trace")
+
+    if require_fault_links and not erasures:
+        raise ValueError("trace contains no injected erasures "
+                         "(require_fault_links=True)")
+    return {
+        "n_events": sum(1 for e in events if e["ph"] != "M"),
+        "n_tracks": len(names),
+        "n_injected": len(injected),
+        "n_injected_erasures": len(erasures),
+        "n_linked": linked,
+        "dropped_events": trace.get("otherData", {}).get("dropped_events",
+                                                         0),
+    }
+
+
+# ------------------------------------------------------------- prometheus ----
+
+def _prom_hist(lines: list[str], name: str, hist, help_: str):
+    lines.append(f"# HELP {name} {help_}")
+    lines.append(f"# TYPE {name} histogram")
+    cum = 0
+    for le, count in hist.buckets():
+        cum = count
+        le_s = "+Inf" if le == float("inf") else f"{le:g}"
+        lines.append(f'{name}_bucket{{le="{le_s}"}} {cum}')
+    lines.append(f"{name}_sum {hist.total:g}")
+    lines.append(f"{name}_count {hist.n}")
+
+
+def prometheus_text(metrics, shardlog=None, now_ms: float | None = None,
+                    recorder: FlightRecorder | None = None) -> str:
+    """Render runtime metric state in the Prometheus text exposition
+    format (0.0.4). ``metrics`` is a ``RuntimeMetrics``; the optional
+    shard timeline adds per-shard duty-cycle gauges and the recorder
+    adds trace-buffer meta-series."""
+    lines: list[str] = []
+    lines.append("# HELP repro_runtime_counter Runtime lifecycle counters.")
+    lines.append("# TYPE repro_runtime_counter counter")
+    for k in sorted(metrics.counters):
+        lines.append(f'repro_runtime_counter{{name="{k}"}} '
+                     f"{metrics.counters[k]}")
+    for name, hist, help_ in (
+            ("repro_request_latency_ms", metrics.latencies_ms,
+             "Submit-to-last-token request latency (sim ms)."),
+            ("repro_request_queueing_ms", metrics.queueing_ms,
+             "Queueing delay before final admission (sim ms)."),
+            ("repro_request_ttft_ms", metrics.ttft_ms,
+             "Time to first token: arrival -> first generated token "
+             "(sim ms)."),
+            ("repro_round_measured_ms", metrics.round_ms,
+             "MEASURED wall-clock decode-round latency (ms).")):
+        _prom_hist(lines, name, hist, help_)
+    lines.append("# HELP repro_queue_depth Admission queue depth.")
+    lines.append("# TYPE repro_queue_depth gauge")
+    lines.append(f"repro_queue_depth {metrics.queue_depth.last}")
+    lines.append(f"repro_queue_depth_max {metrics.queue_depth.vmax}")
+    if shardlog is not None:
+        duty = shardlog.duty_cycle(now_ms)
+        lines.append("# HELP repro_shard_unavailability Per-shard "
+                     "unavailability duty cycle in [0, 1].")
+        lines.append("# TYPE repro_shard_unavailability gauge")
+        for i, u in enumerate(duty):
+            lines.append(f'repro_shard_unavailability{{shard="{i}"}} '
+                         f"{float(u):g}")
+        lines.append("# HELP repro_shard_erasures_total Per-shard erasure "
+                     "count.")
+        lines.append("# TYPE repro_shard_erasures_total counter")
+        for i in range(shardlog.n_shards):
+            lines.append(f'repro_shard_erasures_total{{shard="{i}"}} '
+                         f"{int(shardlog.erasures[i])}")
+    if recorder is not None:
+        lines.append("# HELP repro_trace_events_total Events emitted to "
+                     "the flight recorder.")
+        lines.append("# TYPE repro_trace_events_total counter")
+        lines.append(f"repro_trace_events_total {recorder.n_emitted}")
+        lines.append(f"repro_trace_events_dropped_total {recorder.dropped}")
+    return "\n".join(lines) + "\n"
+
+
+class MetricsServer:
+    """Minimal live exposition server: ``/metrics`` (Prometheus text) and
+    ``/trace`` (current Chrome trace JSON), served from a daemon thread.
+    ``port=0`` binds an ephemeral port (tests); read it back from
+    ``server.port``."""
+
+    def __init__(self, metrics, shardlog=None, recorder=None, clock=None,
+                 port: int = 0, host: str = "127.0.0.1"):
+        outer = self
+
+        class Handler(BaseHTTPRequestHandler):
+            def do_GET(self):                              # noqa: N802
+                if self.path.rstrip("/") in ("", "/metrics", "metrics"):
+                    body = outer.render_metrics().encode()
+                    ctype = "text/plain; version=0.0.4; charset=utf-8"
+                elif self.path.rstrip("/").endswith("trace"):
+                    body = json.dumps(outer.render_trace()).encode()
+                    ctype = "application/json"
+                else:
+                    self.send_error(404)
+                    return
+                self.send_response(200)
+                self.send_header("Content-Type", ctype)
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def log_message(self, *a):                     # quiet
+                pass
+
+        self.metrics = metrics
+        self.shardlog = shardlog
+        self.recorder = recorder
+        self.clock = clock
+        self._httpd = ThreadingHTTPServer((host, port), Handler)
+        self._httpd.daemon_threads = True
+        self._thread: threading.Thread | None = None
+
+    def _now(self) -> float | None:
+        return self.clock.now() if self.clock is not None else None
+
+    def render_metrics(self) -> str:
+        return prometheus_text(self.metrics, self.shardlog, self._now(),
+                               self.recorder)
+
+    def render_trace(self) -> dict:
+        rec = self.recorder if self.recorder is not None \
+            else FlightRecorder(capacity=1)
+        return chrome_trace(rec, self.shardlog, self._now())
+
+    @property
+    def port(self) -> int:
+        return self._httpd.server_address[1]
+
+    def start(self) -> "MetricsServer":
+        self._thread = threading.Thread(target=self._httpd.serve_forever,
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+            self._thread = None

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.tracer import NULL_RECORDER
 from repro.runtime.executor.slotbatch import (blank_state, request_batch,
                                               slot_axis, write_slot)
 from repro.runtime.executor.vstep import VStep
@@ -49,7 +50,7 @@ class SlotPoolExecutor:
     """Batched execution engine the continuous-batching scheduler drives."""
 
     def __init__(self, stepper, n_slots: int, *, overlap: bool = True,
-                 use_fused: bool | str = "auto", metrics=None):
+                 use_fused: bool | str = "auto", metrics=None, tracer=None):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         self.stepper = stepper
@@ -57,6 +58,7 @@ class SlotPoolExecutor:
         self.n_slots = int(n_slots)
         self.overlap = bool(overlap)
         self.metrics = metrics
+        self.tracer = tracer if tracer is not None else NULL_RECORDER
         self.vstep = VStep(stepper, use_fused=use_fused)
         self.state = blank_state(stepper, self.n_slots)
         self.last_toks = jnp.zeros((self.n_slots, 1), jnp.int32)
@@ -110,6 +112,7 @@ class SlotPoolExecutor:
     def _dispatch(self, valid) -> RoundHandle | None:
         if not self.active.any():
             return None
+        t_host = time.perf_counter()
         for hook in self.round_hooks:
             hook(self, valid)
         new_state, toks, _ = self.vstep.round(self.state, self.last_toks,
@@ -119,18 +122,40 @@ class SlotPoolExecutor:
         self.state, self.last_toks = new_state, toks
         occupants = tuple((int(i), self.tags[int(i)])
                           for i in np.flatnonzero(self.active))
-        return RoundHandle(toks, occupants, time.perf_counter())
+        t0 = time.perf_counter()
+        if self.tracer.enabled:
+            self.tracer.emit(
+                "round.dispatch", track="rounds",
+                round=self.vstep.n_dispatches, n_active=len(occupants),
+                dead=[int(i) for i in np.flatnonzero(
+                    ~np.asarray(valid, bool))],
+                wall_args={"dispatch_host_ms": (t0 - t_host) * 1e3})
+        return RoundHandle(toks, occupants, t0)
 
     def _harvest(self, handle: RoundHandle | None
                  ) -> list[tuple[int, Any, int]]:
         if handle is None:
             return []
+        t_block = time.perf_counter()
         jax.block_until_ready(handle.toks)
+        t_ready = time.perf_counter()
         if self.metrics is not None:
             # dispatch->ready when harvesting synchronously; the pipelined
             # round period (host work hidden under device time) with overlap
-            self.metrics.observe_round_ms(
-                (time.perf_counter() - handle.t0) * 1e3)
+            self.metrics.observe_round_ms((t_ready - handle.t0) * 1e3)
+        if self.tracer.enabled:
+            # overlap attribution: period = dispatch->ready wall span;
+            # block = the device time NOT hidden by host work. Under
+            # overlap, period - block is the admission/eviction/queue work
+            # the pipeline successfully hid under device compute.
+            period = (t_ready - handle.t0) * 1e3
+            block = (t_ready - t_block) * 1e3
+            self.tracer.emit(
+                "round.harvest", track="rounds", overlap=self.overlap,
+                n_harvested=len(handle.slots),
+                wall_dur_ms=period,
+                wall_args={"block_ms": block,
+                           "host_overlapped_ms": period - block})
         arr = np.asarray(handle.toks)
         return [(s, tag, int(arr[s, 0])) for s, tag in handle.slots]
 

@@ -75,6 +75,11 @@ class ShardHealthController:
         self.valid = np.ones(n_shards, bool)
         self._pending: list[ShardEvent] = sorted(events or [])
         self.log: list[tuple[ShardEvent, HealthAction]] = []
+        # observers (e.g. ``obs.ShardTimeline``): notified of every applied
+        # event (``on_health(ev, action, mask)``) and of replica swaps
+        # (``on_heal_all(t_ms, healed_shards, mask)``) — the single source
+        # of truth for per-shard health timelines
+        self.observers: list = []
         # high-water mark of concurrent dead shards since the last drain —
         # a beyond-budget burst heals in the same round (replace_replica),
         # so per-round mask sampling alone would never see it; the
@@ -88,10 +93,18 @@ class ShardHealthController:
 
     def poll(self, now_ms: float) -> list[HealthAction]:
         """Apply every pending event due at or before ``now_ms``."""
-        actions = []
+        return [a for _, a in self.poll_events(now_ms)]
+
+    def poll_events(self, now_ms: float
+                    ) -> list[tuple[ShardEvent, HealthAction]]:
+        """Like ``poll`` but keeps the event paired with its action, so
+        callers (the scheduler's tracer wiring) can attribute each action
+        to the shard that caused it."""
+        out = []
         while self._pending and self._pending[0].time_ms <= now_ms:
-            actions.append(self.apply(self._pending.pop(0)))
-        return actions
+            ev = self._pending.pop(0)
+            out.append((ev, self.apply(ev)))
+        return out
 
     def apply(self, ev: ShardEvent) -> HealthAction:
         if ev.kind is EventKind.ERASURE:
@@ -118,6 +131,8 @@ class ShardHealthController:
         else:  # pragma: no cover
             raise ValueError(ev.kind)
         self.log.append((ev, action))
+        for obs in self.observers:
+            obs.on_health(ev, action, self.valid)
         return action
 
     # ---------------------------------------------------------- healing ----
@@ -129,14 +144,21 @@ class ShardHealthController:
             raise ValueError(f"budget must be >= 0, got {budget}")
         self.budget = int(budget) if self.split.suitable_for_cdc else 0
 
-    def replace_replica(self) -> int:
+    def replace_replica(self, t_ms: float | None = None) -> int:
         """2MR path: swap in the standby, all shards healthy again.
 
-        Returns the number of shards that were dead before the swap.
+        ``t_ms`` timestamps the swap for health observers (per-shard
+        down-interval closure); omitted, observers see the time of the
+        last applied event. Returns the number of shards that were dead
+        before the swap.
         """
-        n_dead = int((~self.valid).sum())
+        healed = [int(s) for s in np.flatnonzero(~self.valid)]
         self.valid[:] = True
-        return n_dead
+        if t_ms is None:
+            t_ms = self.log[-1][0].time_ms if self.log else 0.0
+        for obs in self.observers:
+            obs.on_heal_all(float(t_ms), healed, self.valid)
+        return len(healed)
 
     def drain_peak_dead(self) -> int:
         """Return the concurrent-dead high-water mark since the previous

@@ -1,13 +1,34 @@
-"""Runtime telemetry: counters, latency histograms, queue-depth series.
+"""Runtime telemetry: counters, bounded histograms, queue-depth stats.
 
 Everything the benchmarks report comes through here, snapshotted as plain
 JSON-serialisable dicts so ``benchmarks/serve_throughput.py`` (and any
 external collector) can diff coded vs uncoded runs without touching
 runtime internals.
+
+Memory is BOUNDED regardless of run length: the former unbounded
+``latencies_ms``/``queueing_ms``/``round_ms``/``queue_depth`` lists are
+now fixed-bucket log-spaced histograms (exact n/mean/max running
+aggregates + Prometheus-exportable bucket counts) with a deterministic
+bounded reservoir for percentiles. Up to the reservoir size the
+percentiles are EXACT (so every existing CI assertion and
+``BENCH_*.json`` schema is unchanged — same ``p50_ms``/``p99_ms``/
+``mean_ms``/``max_ms`` keys); beyond it they are reservoir estimates,
+reproducible across replays because sampling uses a per-instance seeded
+stream (Vitter's algorithm R), never global randomness.
+
+Counter names are a closed registry: ``count()`` on an unknown name
+raises instead of silently creating a phantom counter (a typo like
+``requests_complete`` used to vanish into the report); extensions go
+through an explicit ``register()``.
+
+TTFT (arrival -> first generated token, simulated clock) is a
+first-class distribution alongside request latency: the ROADMAP's
+chunked-prefill item gates on TTFT p99, and this is its baseline.
 """
 from __future__ import annotations
 
 import json
+from collections import deque
 
 import numpy as np
 
@@ -27,35 +48,163 @@ _COUNTERS = (
     "replans",
 )
 
+#: default reservoir bound — small runs (every test/benchmark in CI) stay
+#: exact; week-long runs stay O(1) in memory.
+RESERVOIR_SIZE = 4096
+#: log-spaced bucket upper bounds, 10 µs .. 1000 s: covers fused-round
+#: microseconds through chaos-storm requeue latencies.
+BUCKET_BOUNDS = tuple(float(b) for b in np.geomspace(1e-2, 1e6, 49))
+
+
+class Histogram:
+    """Fixed-bucket histogram + deterministic bounded reservoir.
+
+    ``observe`` is O(log buckets); ``n``/``total``/``vmax`` are exact
+    running aggregates, ``percentile`` comes from the reservoir (exact
+    while ``n <= reservoir_size``). ``buckets()`` yields cumulative
+    (upper_bound, count) pairs in Prometheus ``le`` convention.
+    """
+
+    def __init__(self, reservoir_size: int = RESERVOIR_SIZE,
+                 bounds: tuple = BUCKET_BOUNDS, seed: int = 0):
+        if reservoir_size < 1:
+            raise ValueError("reservoir_size must be >= 1")
+        self.bounds = np.asarray(bounds, np.float64)
+        if self.bounds.ndim != 1 or not np.all(np.diff(self.bounds) > 0):
+            raise ValueError("bounds must be strictly increasing 1-D")
+        self.counts = np.zeros(self.bounds.size + 1, np.int64)  # +overflow
+        self.reservoir_size = int(reservoir_size)
+        self._res = np.empty(self.reservoir_size, np.float64)
+        self._rng = np.random.default_rng(seed)
+        self.n = 0
+        self.total = 0.0
+        self.vmax = -np.inf
+        self.vmin = np.inf
+
+    def observe(self, x: float):
+        x = float(x)
+        self.n += 1
+        self.total += x
+        self.vmax = max(self.vmax, x)
+        self.vmin = min(self.vmin, x)
+        self.counts[int(np.searchsorted(self.bounds, x, side="left"))] += 1
+        if self.n <= self.reservoir_size:
+            self._res[self.n - 1] = x
+        else:
+            # Vitter's algorithm R: uniform over the stream, deterministic
+            # per instance (seeded stream, no global RNG)
+            j = int(self._rng.integers(self.n))
+            if j < self.reservoir_size:
+                self._res[j] = x
+
+    # ------------------------------------------------------------- read ----
+    def __len__(self) -> int:
+        return self.n
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.n if self.n else 0.0
+
+    def _sample(self) -> np.ndarray:
+        return self._res[:min(self.n, self.reservoir_size)]
+
+    def percentile(self, q: float) -> float:
+        if self.n == 0:
+            raise ValueError("empty histogram")
+        return float(np.percentile(self._sample(), q))
+
+    def buckets(self):
+        """Cumulative (le, count) pairs; the last le is +Inf."""
+        cum = np.cumsum(self.counts)
+        for le, c in zip(self.bounds, cum[:-1]):
+            yield float(le), int(c)
+        yield float("inf"), int(cum[-1])
+
+    def dist(self) -> dict:
+        """The snapshot dict — keys unchanged from the unbounded-list
+        implementation so BENCH_*.json schemas and CI assertions hold."""
+        if self.n == 0:
+            return {"n": 0}
+        return {
+            "n": self.n,
+            "mean_ms": self.mean,
+            "p50_ms": self.percentile(50),
+            "p99_ms": self.percentile(99),
+            "max_ms": float(self.vmax),
+        }
+
+
+class QueueDepthStats:
+    """Running queue-depth aggregates (formerly an unbounded
+    (t_ms, depth) list): exact sample count / mean / max plus the last
+    observed depth for live gauges."""
+
+    def __init__(self):
+        self.n = 0
+        self.total = 0
+        self.vmax = 0
+        self.last = 0
+
+    def sample(self, t_ms: float, depth: int):
+        depth = int(depth)
+        self.n += 1
+        self.total += depth
+        self.vmax = max(self.vmax, depth)
+        self.last = depth
+
+    def snapshot(self) -> dict:
+        return {
+            "samples": self.n,
+            "mean": self.total / self.n if self.n else 0.0,
+            "max": self.vmax,
+        }
+
 
 class RuntimeMetrics:
-    def __init__(self):
+    #: plans kept verbatim for the snapshot's r-series; bounded so a
+    #: perpetual server cannot grow it without limit
+    PLAN_LOG_BOUND = 4096
+
+    def __init__(self, reservoir_size: int = RESERVOIR_SIZE):
         self.counters: dict[str, int] = {k: 0 for k in _COUNTERS}
-        self.latencies_ms: list[float] = []
-        self.queueing_ms: list[float] = []
-        self.round_ms: list[float] = []       # MEASURED wall-clock rounds
-        self.queue_depth: list[tuple[float, int]] = []   # (t_ms, depth)
-        self.plan_log: list[dict] = []        # adaptive-redundancy plans
+        self.latencies_ms = Histogram(reservoir_size, seed=1)
+        self.queueing_ms = Histogram(reservoir_size, seed=2)
+        self.ttft_ms = Histogram(reservoir_size, seed=3)
+        self.round_ms = Histogram(reservoir_size, seed=4)  # MEASURED rounds
+        self.queue_depth = QueueDepthStats()
+        self.plan_log: deque[dict] = deque(maxlen=self.PLAN_LOG_BOUND)
         self.start_ms: float | None = None
         self.end_ms: float | None = None
 
     # ------------------------------------------------------------ write ----
-    def count(self, name: str, n: int = 1):
-        self.counters[name] = self.counters.get(name, 0) + n
+    def register(self, name: str):
+        """Add a counter to the registry (extension point). Registering
+        an existing name is a no-op, never a reset."""
+        self.counters.setdefault(name, 0)
 
-    def observe_request(self, latency_ms: float, queueing_ms: float):
-        self.latencies_ms.append(float(latency_ms))
-        self.queueing_ms.append(float(queueing_ms))
+    def count(self, name: str, n: int = 1):
+        if name not in self.counters:
+            raise KeyError(
+                f"unknown counter {name!r}: register() it first "
+                f"(known: {sorted(self.counters)})")
+        self.counters[name] += n
+
+    def observe_request(self, latency_ms: float, queueing_ms: float,
+                        ttft_ms: float | None = None):
+        self.latencies_ms.observe(latency_ms)
+        self.queueing_ms.observe(queueing_ms)
+        if ttft_ms is not None:
+            self.ttft_ms.observe(ttft_ms)
 
     def observe_round_ms(self, wall_ms: float):
         """Measured wall-clock time of one decode round (dispatch->ready,
         or the pipelined round period under executor overlap) — the
         real-hardware series reported alongside the modelled
         StragglerModel numbers that drive the simulated clock."""
-        self.round_ms.append(float(wall_ms))
+        self.round_ms.observe(wall_ms)
 
     def sample_queue_depth(self, t_ms: float, depth: int):
-        self.queue_depth.append((float(t_ms), int(depth)))
+        self.queue_depth.sample(t_ms, depth)
 
     def observe_plan(self, plan: dict, applied: bool):
         """One adaptive-redundancy planner decision (window boundary)."""
@@ -73,21 +222,8 @@ class RuntimeMetrics:
             return 0.0
         return self.end_ms - self.start_ms
 
-    def _dist(self, xs: list[float]) -> dict:
-        if not xs:
-            return {"n": 0}
-        a = np.asarray(xs, np.float64)
-        return {
-            "n": int(a.size),
-            "mean_ms": float(a.mean()),
-            "p50_ms": float(np.percentile(a, 50)),
-            "p99_ms": float(np.percentile(a, 99)),
-            "max_ms": float(a.max()),
-        }
-
     def snapshot(self) -> dict:
         elapsed_s = self.elapsed_ms / 1e3
-        depths = [d for _, d in self.queue_depth]
         return {
             "counters": dict(self.counters),
             "elapsed_ms": self.elapsed_ms,
@@ -98,14 +234,11 @@ class RuntimeMetrics:
                     self.counters["requests_completed"] / elapsed_s
                     if elapsed_s > 0 else None),
             },
-            "request_latency": self._dist(self.latencies_ms),
-            "queueing_delay": self._dist(self.queueing_ms),
-            "round_latency_measured": self._dist(self.round_ms),
-            "queue_depth": {
-                "samples": len(depths),
-                "mean": float(np.mean(depths)) if depths else 0.0,
-                "max": int(max(depths)) if depths else 0,
-            },
+            "request_latency": self.latencies_ms.dist(),
+            "queueing_delay": self.queueing_ms.dist(),
+            "ttft": self.ttft_ms.dist(),
+            "round_latency_measured": self.round_ms.dist(),
+            "queue_depth": self.queue_depth.snapshot(),
             "planner": {
                 "n_plans": len(self.plan_log),
                 "r_series": [[p["t_ms"], p["r"]] for p in self.plan_log],

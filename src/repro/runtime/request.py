@@ -38,6 +38,7 @@ class Request:
     tokens: list[int] = dataclasses.field(default_factory=list)
     slot: int | None = None
     admitted_ms: float | None = None
+    first_token_ms: float | None = None
     finished_ms: float | None = None
     n_requeues: int = 0
 
@@ -66,6 +67,16 @@ class Request:
             return None
         return self.admitted_ms - self.arrival_ms
 
+    @property
+    def ttft_ms(self) -> float | None:
+        """Time to first token: arrival -> first token of the SURVIVING
+        run (a 2MR requeue discards partial progress, so the stamp resets
+        with it — TTFT then includes the full requeue delay, which is
+        what an SLO sees)."""
+        if self.first_token_ms is None:
+            return None
+        return self.first_token_ms - self.arrival_ms
+
     def reset_for_requeue(self):
         """Discard partial progress; the request goes back to the queue.
 
@@ -76,4 +87,5 @@ class Request:
         self.tokens = []
         self.slot = None
         self.admitted_ms = None
+        self.first_token_ms = None
         self.n_requeues += 1

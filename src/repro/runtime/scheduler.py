@@ -42,6 +42,8 @@ import numpy as np
 
 from repro.core.failure import StragglerModel, request_latency
 from repro.core.seeds import stream_rng
+from repro.obs.shardlog import ShardTimeline
+from repro.obs.tracer import NULL_RECORDER, FlightRecorder
 from repro.runtime.clock import Clock, SimClock
 from repro.runtime.executor import (SlotPoolExecutor, request_batch,
                                     supports_slot_batching)
@@ -94,13 +96,26 @@ class ContinuousBatchingScheduler:
                  clock: Clock | None = None,
                  health: ShardHealthController | None = None,
                  metrics: RuntimeMetrics | None = None,
-                 latency: Any = None):
+                 latency: Any = None,
+                 tracer: FlightRecorder | None = None):
         self.stepper = stepper
         self.rcfg = rcfg
         self.clock = clock if clock is not None else SimClock()
         self.health = health if health is not None else ShardHealthController(
             stepper.n_shards, stepper.erasure_budget)
         self.metrics = metrics if metrics is not None else RuntimeMetrics()
+        # flight recorder (repro.obs): the default NULL_RECORDER makes
+        # every emission a single disabled-branch — zero events recorded
+        self.tracer = tracer if tracer is not None else NULL_RECORDER
+        self.tracer.bind_clock(self.clock)
+        if self.tracer.enabled and not stepper.tracer.enabled:
+            # adopt the stepper so code.resize lands in this stream too
+            stepper.tracer = self.tracer
+        # per-shard health timeline: always on (O(1) per health event);
+        # the SAME source of truth the planner's window stats approximate
+        self.shardlog = ShardTimeline(stepper.n_shards,
+                                      t0_ms=self.clock.now())
+        self.health.observers.append(self.shardlog)
         self.queue = AdmissionQueue(max_depth=rcfg.max_queue_depth)
         self.slots = [_Slot(i) for i in range(rcfg.n_slots)]
         self.completed: list[Request] = []
@@ -126,7 +141,8 @@ class ContinuousBatchingScheduler:
         if batched:
             self.executor = SlotPoolExecutor(
                 stepper, rcfg.n_slots, overlap=rcfg.overlap,
-                use_fused=rcfg.use_fused, metrics=self.metrics)
+                use_fused=rcfg.use_fused, metrics=self.metrics,
+                tracer=self.tracer)
 
     # --------------------------------------------------------- ingestion ----
     def submit(self, prompt, max_new_tokens: int,
@@ -150,11 +166,20 @@ class ContinuousBatchingScheduler:
                       extras=extras)
         self._next_rid += 1
         self.metrics.count("requests_submitted")
+        if self.tracer.enabled:
+            self.tracer.emit("request.submit", track="requests", t_ms=now,
+                             rid=req.rid, prompt_len=int(req.prompt.size),
+                             max_new_tokens=req.max_new_tokens,
+                             deadline_ms=deadline_ms, priority=priority)
         victim = self.queue.push(req)
         if victim is not None:
             victim.state = RequestState.SHED
             self.shed.append(victim)
             self.metrics.count("requests_shed")
+            if self.tracer.enabled:
+                self.tracer.emit("request.shed", track="requests",
+                                 rid=victim.rid, shed_by=req.rid,
+                                 queue_depth=len(self.queue))
         self.metrics.sample_queue_depth(self.clock.now(), len(self.queue))
         return req
 
@@ -168,18 +193,49 @@ class ContinuousBatchingScheduler:
 
     # ------------------------------------------------------------ health ----
     def _handle_health(self):
-        for action in self.health.poll(self.clock.now()):
+        traced = self.tracer.enabled
+        for ev, action in self.health.poll_events(self.clock.now()):
+            track = f"shard:{ev.shard}" if ev.shard >= 0 else "rounds"
             if action is HealthAction.CONTINUE:
                 # CDC path: mask flipped, decode recovers in-step.
                 self.metrics.count("erasures_recovered")
+                if traced:
+                    self.tracer.emit("fault.recovered", track=track,
+                                     t_ms=ev.time_ms, shard=ev.shard,
+                                     n_dead=self.health.n_dead,
+                                     budget=self.health.budget)
             elif action is HealthAction.REQUEUE:
+                if traced:
+                    self.tracer.emit("fault.beyond_budget", track=track,
+                                     t_ms=ev.time_ms, shard=ev.shard,
+                                     fault=ev.kind.value,
+                                     n_dead=self.health.n_dead,
+                                     budget=self.health.budget)
                 self._requeue_inflight()
             elif action is HealthAction.REENCODE:
                 # a shard rejoined: fold it back into the code.
                 self.metrics.count("shards_healed")
-                self.stepper.reencode()
-                self.metrics.count("parity_reencodes")
-            # HealthAction.NOOP: duplicate report, nothing to do
+                if traced:
+                    self.tracer.emit("shard.heal", track=track,
+                                     t_ms=ev.time_ms, shard=ev.shard,
+                                     cause="recovery")
+                self._reencode()
+            elif traced:
+                # duplicate report: resolve the injected fault explicitly
+                # so every fault.inject has a terminal trace event
+                self.tracer.emit("fault.noop", track=track,
+                                 t_ms=ev.time_ms, shard=ev.shard,
+                                 fault=ev.kind.value)
+
+    def _reencode(self):
+        """Offline parity re-encode + its telemetry (single emit point)."""
+        self.stepper.reencode()
+        self.metrics.count("parity_reencodes")
+        self.shardlog.on_reencode(self.clock.now())
+        if self.tracer.enabled:
+            self.tracer.emit("code.reencode", track="rounds",
+                             r=int(self.stepper.model.ctx.code_r)
+                             if self.stepper.coded else 0)
 
     def _requeue_inflight(self):
         """2MR fallback: drain slots, swap the standby replica in, re-encode
@@ -202,14 +258,19 @@ class ContinuousBatchingScheduler:
                     "leaves a healthy window to finish in")
             req.reset_for_requeue()
             victims.append(req)
+            if self.tracer.enabled:
+                self.tracer.emit("request.requeue", track=f"slot:{slot.idx}",
+                                 rid=req.rid, n_requeues=req.n_requeues)
             slot.request, slot.state, slot.last_tok = None, None, None
         for req in victims:
             self.queue.push(req, force=True)
         self.metrics.count("requests_requeued", len(victims))
-        healed = self.health.replace_replica()
+        healed = self.health.replace_replica(self.clock.now())
         self.metrics.count("shards_healed", healed)
-        self.stepper.reencode()
-        self.metrics.count("parity_reencodes")
+        if self.tracer.enabled:
+            self.tracer.emit("shard.heal_all", track="rounds",
+                             healed=healed, requeued=len(victims))
+        self._reencode()
 
     # --------------------------------------------------------- admission ----
     def _admit(self):
@@ -234,8 +295,17 @@ class ContinuousBatchingScheduler:
                 tok = int(np.asarray(t)[0, 0])
             slot.occupancies += 1
             req.tokens.append(tok)
+            req.first_token_ms = now
             self.metrics.count("requests_admitted")
             self.metrics.count("tokens_generated")
+            if self.tracer.enabled:
+                self.tracer.emit("request.admit", track=f"slot:{slot.idx}",
+                                 t_ms=now, rid=req.rid,
+                                 queueing_ms=req.queueing_ms,
+                                 n_requeues=req.n_requeues)
+                self.tracer.emit("request.first_token",
+                                 track=f"slot:{slot.idx}", t_ms=now,
+                                 rid=req.rid, ttft_ms=req.ttft_ms)
             if req.done:
                 self._complete(slot)
 
@@ -245,7 +315,17 @@ class ContinuousBatchingScheduler:
         req.finished_ms = self.clock.now()
         self.completed.append(req)
         self.metrics.count("requests_completed")
-        self.metrics.observe_request(req.latency_ms, req.queueing_ms)
+        self.metrics.observe_request(req.latency_ms, req.queueing_ms,
+                                     ttft_ms=req.ttft_ms)
+        if self.tracer.enabled:
+            # span over the slot occupancy: admit -> last token
+            self.tracer.emit("request.complete", track=f"slot:{slot.idx}",
+                             t_ms=req.admitted_ms,
+                             dur_ms=req.finished_ms - req.admitted_ms,
+                             rid=req.rid, n_tokens=len(req.tokens),
+                             latency_ms=req.latency_ms,
+                             ttft_ms=req.ttft_ms,
+                             n_requeues=req.n_requeues)
         # the slot (and its KV-cache row) is immediately reusable
         slot.request, slot.state, slot.last_tok = None, None, None
         if self.executor is not None:

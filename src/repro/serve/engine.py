@@ -31,6 +31,8 @@ import numpy as np
 
 from repro.core.failure import StragglerModel, request_latency
 from repro.models.zoo import Model
+# tracer module only (no package init): keeps serve <-> runtime acyclic
+from repro.obs.tracer import NULL_RECORDER
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,10 +52,13 @@ class ModelStepper:
     """
 
     def __init__(self, model: Model, params, max_len: int,
-                 cache_dtype: Any = jnp.float32):
+                 cache_dtype: Any = jnp.float32, tracer=None):
         self.model = model
         self.max_len = int(max_len)
         self.cache_dtype = cache_dtype
+        # flight recorder (repro.obs); the scheduler re-binds its own so
+        # code-geometry changes land in the same event stream
+        self.tracer = tracer if tracer is not None else NULL_RECORDER
         self._raw_params = params
         self.params = model.encode_offline(params)
         self.coded = bool(model.ctx.coded)
@@ -84,11 +89,15 @@ class ModelStepper:
             raise ValueError(f"code_r must be >= 0, got {code_r}")
         if not self.coded or code_r == int(self.model.ctx.code_r):
             return False
+        r_old = int(self.model.ctx.code_r)
         ctx = dataclasses.replace(self.model.ctx, code_r=code_r)
         self.model = dataclasses.replace(self.model, ctx=ctx)
         self.params = self.model.encode_offline(self._raw_params)
         spec = ctx.spec
         self.erasure_budget = int(spec.max_device_failures) if spec else 0
+        if self.tracer.enabled:
+            self.tracer.emit("code.resize", track="rounds", r_old=r_old,
+                             r_new=code_r, budget=self.erasure_budget)
         return True
 
     def full_mask(self) -> np.ndarray:

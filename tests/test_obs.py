@@ -1,0 +1,421 @@
+"""Flight recorder, shard timelines, and exporters (``repro.obs``).
+
+Tier-1 properties: the recorder is deterministic under SimClock replay
+(a seeded chaos run traced twice yields identical event streams modulo
+wall-clock fields), instants are monotone in sim time and spans are
+non-negative, the Chrome/Perfetto export validates and round-trips
+through JSON with every injected fault linked to its resolution, the
+per-shard duty cycles agree with the live ``ShardHealthController``
+mask, the bounded metrics keep their snapshot schema (and reject unknown
+counter names), and a scheduler WITHOUT a tracer records zero events
+through a no-op whose ``emit`` is never even called.
+"""
+import json
+import urllib.request
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, smoke_config
+from repro.faults import (AdaptiveRedundancyPlanner, ChaosSpec,
+                          FaultInjector, PlannerConfig, TraceInjector,
+                          attach_chaos, attach_planner, churn_trace)
+from repro.models import TPCtx, build
+from repro.obs import (EVENT_KINDS, NULL_RECORDER, FlightRecorder,
+                       MetricsServer, ShardTimeline, chrome_trace,
+                       prometheus_text, validate_chrome_trace,
+                       write_chrome_trace)
+from repro.obs.tracer import _NullRecorder
+from repro.runtime import (ContinuousBatchingScheduler, HealthAction,
+                           RuntimeConfig, ShardHealthController, SimClock,
+                           erasure, recovery, run_arrivals)
+from repro.runtime.metrics import Histogram, RuntimeMetrics
+from repro.serve import ModelStepper
+
+GEN = 6
+PROMPT_LEN = 8
+
+
+def _fresh_stepper(code_r=2, tp=4):
+    cfg = smoke_config(get_arch("granite-3-8b"))
+    model = build(cfg, TPCtx(tp=tp, mode="coded", code_r=code_r,
+                             moe_capacity=0))
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, ModelStepper(model, params, max_len=48)
+
+
+def _workload(cfg, n, span_ms=400.0):
+    rng = np.random.default_rng(7)
+    gap = span_ms / max(n, 1)
+    return [(i * gap, rng.integers(0, cfg.vocab, PROMPT_LEN), GEN)
+            for i in range(n)]
+
+
+def _chaos_run(tracer, seed=0, n_requests=6):
+    """One seeded churn run with a tracer; returns (sched, completed)."""
+    cfg, stepper = _fresh_stepper()
+    injector = FaultInjector(
+        ChaosSpec(mtbf_ms=120.0, mttr_ms=30.0), stepper.n_shards, seed=seed)
+    health = ShardHealthController(stepper.n_shards, stepper.erasure_budget)
+    sched = ContinuousBatchingScheduler(
+        stepper, RuntimeConfig(n_slots=2, step_time_ms=10.0, seed=seed),
+        health=health, tracer=tracer)
+    attach_chaos(sched, injector)
+    completed = run_arrivals(sched, _workload(cfg, n_requests))
+    return sched, completed
+
+
+# ----------------------------------------------------------- recorder ----
+
+def test_emit_rejects_unknown_kind():
+    rec = FlightRecorder()
+    with pytest.raises(ValueError, match="unknown trace event kind"):
+        rec.emit("request.submitt", rid=0)
+
+
+def test_ring_buffer_bounds_memory():
+    rec = FlightRecorder(capacity=8)
+    for i in range(20):
+        rec.emit("round.dispatch", track="rounds", t_ms=float(i), round=i)
+    assert len(rec) == 8
+    assert rec.n_emitted == 20
+    assert rec.dropped == 12
+    # the OLDEST events were dropped
+    assert [e.args["round"] for e in rec.events()] == list(range(12, 20))
+
+
+def test_comparable_excludes_wall_fields():
+    a, b = FlightRecorder(), FlightRecorder()
+    for rec in (a, b):
+        rec.emit("round.harvest", track="rounds", t_ms=1.0,
+                 wall_dur_ms=float(np.random.default_rng().random()),
+                 wall_args={"block_ms": float(id(rec))}, n_harvested=2)
+    assert a.comparable() == b.comparable()
+    assert a.events()[0].wall_args != b.events()[0].wall_args
+
+
+def test_emit_stamps_with_bound_sim_clock():
+    clock = SimClock()
+    rec = FlightRecorder(clock=clock)
+    clock.advance(42.0)
+    ev = rec.emit("code.reencode", track="rounds", r=2)
+    assert ev.t_ms == 42.0
+    # bind_clock adopts only when unbound
+    rec.bind_clock(SimClock())
+    assert rec.clock is clock
+
+
+def test_null_recorder_is_inert():
+    assert NULL_RECORDER.enabled is False
+    assert NULL_RECORDER.emit("request.submit", rid=0) is None
+    assert len(NULL_RECORDER) == 0
+    NULL_RECORDER.bind_clock(SimClock())     # shared singleton: never binds
+    assert NULL_RECORDER.clock is None
+
+
+def test_untraced_scheduler_never_calls_emit(monkeypatch):
+    """The disabled fast path is ONE branch: call sites guard on
+    ``tracer.enabled`` and must not even call ``emit`` (the <=1%-overhead
+    contract for tracing-off runs)."""
+    def boom(self, *a, **kw):
+        raise AssertionError("emit() called on a disabled recorder")
+    monkeypatch.setattr(_NullRecorder, "emit", boom)
+    sched, completed = _chaos_run(tracer=None, seed=1, n_requests=3)
+    assert sched.tracer is NULL_RECORDER
+    assert len(completed) == 3
+    assert len(NULL_RECORDER) == 0
+
+
+# ----------------------------------------------- deterministic replay ----
+
+@pytest.fixture(scope="module")
+def traced_pair():
+    rec_a, rec_b = FlightRecorder(), FlightRecorder()
+    sched_a, _ = _chaos_run(rec_a, seed=3)
+    sched_b, _ = _chaos_run(rec_b, seed=3)
+    return rec_a, sched_a, rec_b, sched_b
+
+
+def test_chaos_replay_identical_event_stream(traced_pair):
+    rec_a, sched_a, rec_b, sched_b = traced_pair
+    assert len(rec_a) > 0
+    assert rec_a.comparable() == rec_b.comparable()
+    snap_a, snap_b = sched_a.metrics.snapshot(), sched_b.metrics.snapshot()
+    # the MEASURED wall-clock round series is real-hardware timing, the
+    # one intentionally nondeterministic surface; everything else replays
+    snap_a.pop("round_latency_measured")
+    snap_b.pop("round_latency_measured")
+    assert snap_a == snap_b
+
+
+def test_instants_monotone_and_spans_nonnegative(traced_pair):
+    """Per (track, kind) the sim stamps are non-decreasing (fault events
+    carry their SCHEDULED sim time, so streams interleave across kinds at
+    a round boundary — but each stream is time-ordered), no stamp is in
+    the future of the round that emitted it, and spans are well-formed."""
+    rec, sched = traced_pair[0], traced_pair[1]
+    last: dict = {}
+    for e in rec.events():
+        assert e.dur_ms >= 0.0 and e.wall_dur_ms >= 0.0
+        assert e.kind in EVENT_KINDS
+        assert e.t_ms <= sched.clock.now()
+        if e.dur_ms == 0.0:      # spans backfill their start time
+            key = (e.track, e.kind)
+            assert e.t_ms >= last.get(key, -np.inf), key
+            last[key] = e.t_ms
+
+
+def test_request_lifecycle_accounting(traced_pair):
+    rec, sched = traced_pair[0], traced_pair[1]
+    c = sched.metrics.counters
+    assert len(rec.by_kind("request.submit")) == c["requests_submitted"]
+    assert len(rec.by_kind("request.admit")) == c["requests_admitted"]
+    assert len(rec.by_kind("request.complete")) == c["requests_completed"]
+    assert len(rec.by_kind("fault.inject")) == c["faults_injected"]
+    assert len(rec.by_kind("fault.recovered")) == c["erasures_recovered"]
+    for e in rec.by_kind("request.complete"):
+        assert 0.0 <= e.args["ttft_ms"] <= e.args["latency_ms"]
+    # TTFT distribution observed for every completion
+    assert sched.metrics.ttft_ms.n == c["requests_completed"]
+
+
+# ------------------------------------------------------- chrome export ----
+
+def test_chrome_trace_validates_and_roundtrips(tmp_path, traced_pair):
+    rec, sched = traced_pair[0], traced_pair[1]
+    path = tmp_path / "run.trace.json"
+    trace = write_chrome_trace(str(path), rec, sched.shardlog,
+                               now_ms=sched.clock.now())
+    loaded = json.loads(path.read_text())
+    assert loaded == trace
+    stats = validate_chrome_trace(loaded, require_fault_links=True)
+    assert stats["n_injected_erasures"] > 0
+    assert stats["n_linked"] == stats["n_injected_erasures"]
+    # exported events = recorder buffer + one "down" slice per interval
+    assert stats["n_events"] == len(rec) + \
+        len(sched.shardlog.all_intervals(sched.clock.now()))
+    names = {e["args"]["name"] for e in loaded["traceEvents"]
+             if e.get("name") == "thread_name"}
+    assert {"requests", "rounds"} <= names
+    assert any(n.startswith("shard:") for n in names)
+    assert any(n.startswith("slot:") for n in names)
+
+
+def test_validator_rejects_unresolved_fault():
+    rec = FlightRecorder(clock=SimClock())
+    rec.emit("fault.inject", track="shard:0", t_ms=5.0, fault="erasure",
+             shard=0)
+    with pytest.raises(ValueError, match="no recovery"):
+        validate_chrome_trace(chrome_trace(rec))
+    rec.emit("fault.recovered", track="shard:0", t_ms=5.0, shard=0,
+             n_dead=1, budget=1)
+    assert validate_chrome_trace(chrome_trace(rec))["n_linked"] == 1
+
+
+def test_beyond_budget_chain_links_and_traces():
+    """Two concurrent erasures beat the r=2 folded budget of 1: the trace
+    must carry the full 2MR chain (beyond_budget -> requeue -> heal_all ->
+    reencode) and still validate."""
+    cfg, stepper = _fresh_stepper()
+    trace = [{"t_ms": 30.0, "kind": "erasure", "shard": 0},
+             {"t_ms": 30.0, "kind": "erasure", "shard": 1}]
+    injector = TraceInjector(trace, stepper.n_shards)
+    health = ShardHealthController(stepper.n_shards, stepper.erasure_budget)
+    rec = FlightRecorder()
+    sched = ContinuousBatchingScheduler(
+        stepper, RuntimeConfig(n_slots=2, step_time_ms=10.0),
+        health=health, tracer=rec)
+    attach_chaos(sched, injector)
+    completed = run_arrivals(sched, _workload(cfg, 4, span_ms=100.0))
+    assert len(completed) == 4
+    assert len(rec.by_kind("fault.beyond_budget")) == 1
+    assert len(rec.by_kind("shard.heal_all")) == 1
+    assert len(rec.by_kind("request.requeue")) >= 1
+    assert len(rec.by_kind("code.reencode")) >= 1
+    stats = validate_chrome_trace(
+        chrome_trace(rec, sched.shardlog, now_ms=sched.clock.now()),
+        require_fault_links=True)
+    assert stats["n_linked"] == stats["n_injected_erasures"] == 2
+
+
+def test_planner_decisions_and_resize_traced():
+    cfg, stepper = _fresh_stepper()
+    trace = churn_trace(stepper.n_shards, 60.0, 600.0, period_ms=150.0,
+                        down_ms=60.0, concurrent=2)
+    injector = TraceInjector(trace, stepper.n_shards)
+    health = ShardHealthController(stepper.n_shards, stepper.erasure_budget)
+    rec = FlightRecorder()
+    sched = ContinuousBatchingScheduler(
+        stepper, RuntimeConfig(n_slots=2, step_time_ms=10.0),
+        health=health, tracer=rec)
+    attach_chaos(sched, injector)
+    attach_planner(sched, AdaptiveRedundancyPlanner(
+        PlannerConfig(window_ms=100.0), stepper.n_shards,
+        layout=stepper.model.ctx.code_layout))
+    run_arrivals(sched, _workload(cfg, 8, span_ms=700.0))
+    plans = rec.by_kind("planner.plan")
+    assert len(plans) == len(sched.metrics.plan_log)
+    assert all(e.track == "planner" for e in plans)
+    assert all({"budget", "r", "applied", "reason"} <= set(e.args)
+               for e in plans)
+    # the storm forces a replan: the stepper (adopted by the scheduler)
+    # must surface the geometry change as code.resize
+    assert sched.metrics.counters["replans"] >= 1
+    resizes = rec.by_kind("code.resize")
+    assert len(resizes) >= 1
+    assert resizes[0].args["r_new"] != resizes[0].args["r_old"]
+    validate_chrome_trace(
+        chrome_trace(rec, sched.shardlog, now_ms=sched.clock.now()),
+        require_fault_links=True)
+
+
+# ------------------------------------------------------ shard timeline ----
+
+def test_shard_timeline_matches_controller():
+    health = ShardHealthController(4, budget=2)
+    tl = ShardTimeline(4, t0_ms=0.0)
+    health.observers.append(tl)
+    for ev in (erasure(10.0, 0), erasure(20.0, 2), recovery(40.0, 0),
+               erasure(50.0, 0), recovery(80.0, 2)):
+        health.apply(ev)
+    # open interval on shard 0 only; controller mask must agree
+    assert tl.down_now.tolist() == (~health.valid).tolist()
+    duty = tl.duty_cycle(100.0)
+    # shard 0: down [10,40) + [50,100 open) = 80ms of 100; shard 2: 60ms
+    assert duty[0] == pytest.approx(0.8)
+    assert duty[2] == pytest.approx(0.6)
+    assert duty[1] == duty[3] == 0.0
+    assert tl.erasures.tolist() == [2, 0, 1, 0]
+    assert tl.recoveries.tolist() == [1, 0, 1, 0]
+    snap = tl.snapshot(100.0)
+    assert snap["total_erasures"] == 3
+    assert snap["shards"][0]["down_now"] is True
+    assert snap["max_duty_cycle"] == pytest.approx(0.8)
+    ivs = tl.all_intervals(100.0)
+    assert (0, 50.0, 100.0, "open") in ivs
+    assert (2, 20.0, 80.0, "recovery") in ivs
+
+
+def test_shard_timeline_replica_swap_heals_everything():
+    health = ShardHealthController(4, budget=1)
+    tl = ShardTimeline(4)
+    health.observers.append(tl)
+    health.apply(erasure(5.0, 1))
+    health.apply(erasure(7.0, 3))               # beyond budget
+    assert health.replace_replica(9.0) == 2     # 2MR swap
+    assert not tl.down_now.any()
+    assert health.valid.all()
+    assert tl.replica_heals.tolist() == [0, 1, 0, 1]
+    assert tl.downtime_ms[1] == pytest.approx(4.0)
+    assert tl.downtime_ms[3] == pytest.approx(2.0)
+    # duplicate erasure reports apply as NOOP and leave the timeline alone
+    health.apply(erasure(10.0, 1))
+    health.apply(erasure(11.0, 1))
+    assert health.log[-1][1] is HealthAction.NOOP
+    assert tl.erasures[1] == 2
+
+
+def test_scheduler_shardlog_live_consistency(traced_pair):
+    sched = traced_pair[1]
+    tl = sched.shardlog
+    assert tl.down_now.tolist() == (~sched.health.valid).tolist()
+    duty = tl.duty_cycle(sched.clock.now())
+    assert np.all((0.0 <= duty) & (duty <= 1.0))
+    assert int(tl.erasures.sum()) >= \
+        sched.metrics.counters["erasures_recovered"]
+
+
+# ------------------------------------------------------ bounded metrics ----
+
+def test_histogram_exact_until_reservoir_then_bounded():
+    h = Histogram(reservoir_size=64, seed=0)
+    xs = np.arange(1.0, 51.0)
+    for x in xs:
+        h.observe(x)
+    assert len(h) == 50
+    assert h.percentile(50) == pytest.approx(np.percentile(xs, 50))
+    assert h.percentile(99) == pytest.approx(np.percentile(xs, 99))
+    assert h.dist()["max_ms"] == 50.0
+    for x in np.arange(51.0, 1001.0):        # push past the reservoir
+        h.observe(x)
+    assert h.n == 1000
+    assert h._res.size == 64                 # memory stays bounded
+    assert h.dist()["n"] == 1000
+    assert h.dist()["max_ms"] == 1000.0
+    assert h.mean == pytest.approx(np.arange(1.0, 1001.0).mean())
+    les, counts = zip(*h.buckets())
+    assert les[-1] == float("inf") and counts[-1] == 1000
+    assert all(a <= b for a, b in zip(counts, counts[1:]))  # cumulative
+
+
+def test_histogram_reservoir_is_deterministic():
+    a, b = Histogram(reservoir_size=32, seed=5), \
+        Histogram(reservoir_size=32, seed=5)
+    for x in np.random.default_rng(0).exponential(10.0, 500):
+        a.observe(x)
+        b.observe(x)
+    assert a.percentile(50) == b.percentile(50)
+    assert a.dist() == b.dist()
+
+
+def test_metrics_unknown_counter_raises():
+    m = RuntimeMetrics()
+    with pytest.raises(KeyError, match="unknown counter"):
+        m.count("requests_complete")         # the old silent-typo bug
+    m.register("custom_events")
+    m.count("custom_events", 3)
+    assert m.counters["custom_events"] == 3
+    m.register("custom_events")              # re-register: no reset
+    assert m.counters["custom_events"] == 3
+
+
+def test_snapshot_schema_unchanged():
+    m = RuntimeMetrics()
+    m.mark(0.0)
+    m.observe_request(10.0, 2.0, ttft_ms=3.0)
+    m.observe_round_ms(1.5)
+    m.sample_queue_depth(1.0, 4)
+    m.mark(5.0)
+    snap = m.snapshot()
+    for key in ("counters", "elapsed_ms", "throughput", "request_latency",
+                "queueing_delay", "ttft", "round_latency_measured",
+                "queue_depth", "planner"):
+        assert key in snap
+    assert set(snap["request_latency"]) == \
+        {"n", "mean_ms", "p50_ms", "p99_ms", "max_ms"}
+    assert snap["ttft"]["p50_ms"] == 3.0
+    assert json.loads(m.to_json())           # JSON-serialisable
+
+
+# -------------------------------------------------- prometheus + server ----
+
+def test_prometheus_text_exposition(traced_pair):
+    rec, sched = traced_pair[0], traced_pair[1]
+    text = prometheus_text(sched.metrics, sched.shardlog,
+                           sched.clock.now(), rec)
+    assert 'repro_runtime_counter{name="requests_completed"}' in text
+    assert 'repro_request_ttft_ms_bucket{le="+Inf"}' in text
+    assert "repro_request_latency_ms_sum" in text
+    assert 'repro_shard_unavailability{shard="0"}' in text
+    assert f"repro_trace_events_total {rec.n_emitted}" in text
+    # every histogram's +Inf bucket equals its count
+    for line in text.splitlines():
+        if line.startswith("repro_request_latency_ms_count"):
+            assert line.split()[-1] == str(sched.metrics.latencies_ms.n)
+
+
+def test_metrics_server_serves_metrics_and_trace(traced_pair):
+    rec, sched = traced_pair[0], traced_pair[1]
+    server = MetricsServer(sched.metrics, sched.shardlog, rec,
+                           sched.clock, port=0).start()
+    try:
+        base = f"http://127.0.0.1:{server.port}"
+        with urllib.request.urlopen(f"{base}/metrics", timeout=10) as r:
+            assert r.status == 200
+            assert b"repro_runtime_counter" in r.read()
+        with urllib.request.urlopen(f"{base}/trace", timeout=10) as r:
+            trace = json.loads(r.read())
+        validate_chrome_trace(trace, require_fault_links=True)
+    finally:
+        server.stop()
