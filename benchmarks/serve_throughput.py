@@ -60,7 +60,9 @@ def make_workload(rng: np.random.Generator, n_requests: int, rate_rps: float,
 def run_mode(cfg, workload, *, coded: bool, tp: int, code_r: int,
              n_slots: int, fail_time_ms: float | None, fail_shard: int,
              straggler: StragglerModel, seed: int,
-             batched: bool | None = None, stepper=None) -> dict:
+             batched: bool | None = None, stepper=None,
+             use_fused: bool | str = "auto",
+             collect_tokens: bool = False) -> dict:
     if stepper is None:
         ctx = TPCtx(tp=tp, mode="coded" if coded else "plain",
                     code_r=code_r, moe_capacity=0)
@@ -74,7 +76,8 @@ def run_mode(cfg, workload, *, coded: bool, tp: int, code_r: int,
                                    events=events)
     sched = ContinuousBatchingScheduler(
         stepper, RuntimeConfig(n_slots=n_slots, straggler=straggler,
-                               seed=seed, batched=batched), health=health)
+                               seed=seed, batched=batched,
+                               use_fused=use_fused), health=health)
     t0 = time.perf_counter()
     completed = run_arrivals(sched, workload)
     wall_s = time.perf_counter() - t0
@@ -95,6 +98,9 @@ def run_mode(cfg, workload, *, coded: bool, tp: int, code_r: int,
     meas = snap["round_latency_measured"]
     snap["rounds_per_s"] = (1e3 / meas["p50_ms"]
                             if meas.get("p50_ms") else None)
+    if collect_tokens:
+        snap["tokens"] = {str(r.rid): [int(t) for t in r.tokens]
+                          for r in completed}
     return snap
 
 
@@ -123,6 +129,47 @@ def executor_comparison(cfg, workload, common: dict) -> dict:
     seq, bat = out["sequential"], out["batched"]
     if seq["rounds_per_s"] and bat["rounds_per_s"]:
         out["batched_speedup"] = bat["rounds_per_s"] / seq["rounds_per_s"]
+    return out
+
+
+def fused_body_comparison(cfg, workload, common: dict) -> dict:
+    """Same coded workload through the batched executor with the FULL
+    Pallas round — fused in-body coded GEMM + Eq. 12 decode-and-merge
+    kernels plus the fused coded head (``use_fused=True``) — vs the
+    reference round (``use_fused=False``), one shared stepper.
+
+    ``fused_native`` records whether the kernels compiled natively (TPU)
+    or ran in Pallas interpret mode: interpret regresses wall-clock by
+    construction (the kernel body is unrolled per grid step), so speed
+    claims only hold on the native path — but the TOKEN STREAMS must
+    match everywhere, which is what CI asserts on CPU runners.
+    """
+    ctx = TPCtx(tp=common["tp"], mode="coded", code_r=common["code_r"],
+                moe_capacity=0)
+    model = build(cfg, ctx)
+    params = model.init(jax.random.PRNGKey(0))
+    max_len = max(len(w[1]) + w[2] for w in workload) + 8
+    stepper = ModelStepper(model, params, max_len=max_len)
+    out = {"fused_native": jax.default_backend() == "tpu"}
+    toks = {}
+    for name, fused in (("reference", False), ("fused", True)):
+        snap = run_mode(cfg, workload, coded=True, stepper=stepper,
+                        batched=True, use_fused=fused,
+                        collect_tokens=True, **common)
+        toks[name] = snap.pop("tokens")
+        out[name] = {
+            "rounds_per_s": snap["rounds_per_s"],
+            "rounds_per_s_wall": snap["rounds_per_s_wall"],
+            "wall_s": snap["wall_s"],
+            "decode_rounds": snap["counters"]["decode_rounds"],
+            "round_latency_measured": snap["round_latency_measured"],
+            "completed_all": snap["completed_all"],
+        }
+    out["tokens_match"] = toks["fused"] == toks["reference"]
+    ref_rps, fus_rps = (out["reference"]["rounds_per_s"],
+                        out["fused"]["rounds_per_s"])
+    if ref_rps and fus_rps:
+        out["fused_speedup"] = fus_rps / ref_rps
     return out
 
 
@@ -191,6 +238,10 @@ def main():
                     help="batched-vs-sequential bench report path "
                          "('' disables)")
     ap.add_argument("--skip-executor-compare", action="store_true")
+    ap.add_argument("--fused-body", action="store_true",
+                    help="add the fused-vs-reference round comparison "
+                         "(full-Pallas decode round) to the report and "
+                         "BENCH_serve.json")
     ap.add_argument("--compare-archs",
                     default="granite-3-8b,whisper-medium,xlstm-125m",
                     help="comma-separated archs for the per-architecture "
@@ -235,6 +286,9 @@ def main():
                  if a.strip()]
         report["executor_comparison"] = zoo_executor_comparison(
             archs, args.smoke, args, common)
+    if args.fused_body:
+        report["fused_body_comparison"] = fused_body_comparison(
+            cfg, workload, common)
 
     print(json.dumps(report, indent=2, sort_keys=True))
     if args.out:
@@ -242,12 +296,15 @@ def main():
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:
             json.dump(report, f, indent=2, sort_keys=True)
-    if args.bench_out and "executor_comparison" in report:
+    if args.bench_out and ("executor_comparison" in report
+                           or "fused_body_comparison" in report):
         bench = {
             "bench": "serve_throughput",
             "workload": report["workload"],
-            "executor_comparison": report["executor_comparison"],
         }
+        for key in ("executor_comparison", "fused_body_comparison"):
+            if key in report:
+                bench[key] = report[key]
         with open(args.bench_out, "w") as f:
             json.dump(bench, f, indent=2, sort_keys=True)
     if not report["coded"]["completed_all"]:

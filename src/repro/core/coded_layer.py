@@ -76,6 +76,15 @@ class CodedDenseSpec:
 CodedLayout = CodedDenseSpec  # alias
 
 
+def _fused_enabled(use_fused: bool | str) -> bool:
+    """The shared fused-kernel policy: ``"auto"`` enables the Pallas path
+    only where it compiles natively (TPU); True forces it (interpret mode
+    elsewhere — the conformance suites); False is the plain-jnp reference."""
+    if use_fused == "auto":
+        return jax.default_backend() == "tpu"
+    return bool(use_fused)
+
+
 def pad_for_code(m: int, n_shards: int, align: int = 8) -> int:
     """Round output dim up so m % (T*T*align) == 0 (shard width divides into
     T aligned parity slices). align=128 for MXU-friendly production dims."""
@@ -175,6 +184,7 @@ def decode_and_merge(
     *,
     valid_parity: jax.Array | None = None,
     acc_dtype=jnp.float32,
+    use_fused: bool | str = False,
 ) -> jax.Array:
     """Recovery + merge given already-computed shard outputs.
 
@@ -196,6 +206,10 @@ def decode_and_merge(
     T = code.n_shards
     if parity is None or code.n_parity == 0 or valid is None:
         return merge_shards(ys)
+    if _fused_enabled(use_fused):
+        from repro.kernels import ops  # deferred: kernels import this module
+        return ops.fused_decode_merge(ys, parity, spec, valid,
+                                      valid_parity=valid_parity)
     if valid_parity is None:
         valid_parity = valid
     vshape = (T,) + (1,) * (ys.ndim - 1)
@@ -219,6 +233,7 @@ def coded_matmul(
     *,
     valid_parity: jax.Array | None = None,
     acc_dtype=jnp.float32,
+    use_fused: bool | str = False,
 ) -> jax.Array:
     """Output-split GEMM with CDC protection (paper Eq. 7/11 + recovery 12).
 
@@ -234,6 +249,12 @@ def coded_matmul(
         (whole-device failure: a dead device loses its data shard AND its
         folded parity slices). Pass all-ones for the message-erasure model,
         where r=1 folded already recovers a lost data message.
+      use_fused: route through the fused Pallas kernel
+        (``kernels.ops.fused_coded_matmul``): shard GEMMs + Eq. 12 decode +
+        merge in one kernel, no per-shard HBM round-trips. ``"auto"`` =
+        native TPU only; True forces (interpret elsewhere); False (default)
+        = this reference path. The fused kernel covers the <=1-erasure
+        regime and falls back here beyond it.
 
     Returns:
       [..., m] the full (merged) output, identical to x @ w when all shards
@@ -241,6 +262,11 @@ def coded_matmul(
     """
     code = spec.code
     T = code.n_shards
+    if w_cdc is not None and code.n_parity > 0 and valid is not None \
+            and _fused_enabled(use_fused):
+        from repro.kernels import ops  # deferred: kernels import this module
+        return ops.fused_coded_matmul(x, w, w_cdc, spec, valid,
+                                      valid_parity=valid_parity)
     k, m = w.shape
     m_l = m // T
     w_st = jnp.moveaxis(w.reshape(k, T, m_l), 1, 0)  # [T, k, m_l]

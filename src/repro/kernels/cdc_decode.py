@@ -17,9 +17,19 @@ LM-head GEMM + Eq. 12 parity decode + greedy argmax in ONE kernel. Per
 column tile it computes every shard's head output y_d = x @ W_d plus the
 sum-parity output p = x @ W_cdc0, recovers an erased shard in-register, and
 folds a running (max, argmax) over the merged vocabulary — the [B, vocab]
-logits tensor is never materialised in HBM. Tolerates one erased shard
-(generator row 0 is the paper's all-ones sum code); the executor falls back
-to the reference path for multi-erasure rounds.
+logits tensor is never materialised in HBM.
+
+Erasure limit (ASYMMETRY with the reference path, by design): both kernels
+here consume exactly ONE parity equation — the all-ones sum row (paper
+Eq. 12) — so they recover at most ONE erased shard even when the code's
+budget is larger (dedicated layout with r=2 tolerates 2). The reference
+path (full logits + ``core.coding.decode_outputs`` MDS solve) covers the
+full budget. ``executor.vstep.round`` counts the host mask BEFORE
+dispatch and routes 2+-erasure rounds to the reference variant, and
+``kernels.ops`` raises on host-concrete masks beyond the limit — an
+in-budget multi-erasure round degrades to the slower exact path, never to
+a silently wrong token. (The in-BODY fused kernels in ``cdc_matmul``
+share the regime but generalise the equation: see ``eq12_plan``.)
 """
 from __future__ import annotations
 

@@ -1,0 +1,250 @@
+"""Fused Pallas kernels for the IN-BODY coded decode round.
+
+The Pallas fast path used to end at the LM head (``cdc_decode.py``): every
+in-body coded GEMM — attention QKV, FFN up/gate, and their erasure
+recovery — still round-tripped T shard outputs plus r parity outputs
+through HBM on the reference path, then re-read them for the Eq. 12
+decode and the merge. These kernels close that gap: ONE kernel computes
+the T shard GEMMs and the parity GEMMs tile-by-tile, applies the paper's
+Eq. 12 parity reconstruction for masked shards in-register, and writes
+the MERGED activation directly — per-shard outputs never exist in HBM.
+
+``cdc_coded_matmul_pallas`` — fused coded matmul + decode + merge:
+    x [rows, k] @ w_shards [T, k, m_l] (+ parity_w [r, k, m_l])
+      -> merged [rows, T, m_l]      (reshape to [rows, T*m_l] is free:
+                                     the kernel writes merge order directly)
+  Optionally folds the preceding RMSNorm into the same VMEM pass
+  (``gamma`` — the stretch fusion: norm + coded GEMM + decode + merge).
+
+``cdc_decode_merge_pallas`` — decode-and-merge of ALREADY-computed shard
+outputs (the ``core.decode_and_merge`` tail, e.g. outputs gathered by
+``dist.collectives``): ys [T, rows, m_l] + parity [r, rows, m_l]
+-> merged [rows, T, m_l], same in-register Eq. 12 pass.
+
+Erasure regime (both kernels): at most ONE erased shard — the paper's
+Eq. 12 sum-code recovery, generalised to any generator row via a
+per-column equation plan (``eq12_plan``). For the folded/staggered parity
+placement a dead device also kills one parity *slice* per equation, so
+the plan selects, per output column, the lowest-index parity equation
+whose slice survived (exactly ``decode_folded``'s top-1 selection) and
+bakes the 1/gen[e, d] back-substitution coefficient in. Beyond one
+erasure the callers (``kernels.ops``, ``executor.vstep``) fall back to
+the reference MDS path — never a silent wrong answer.
+
+Tile layout: grid (rows/bm, m_l/bn); per instance the FULL contraction
+dim k and the full (small) shard axis are resident, so the recovery math
+never leaves VMEM:
+  VMEM floats ~= bm*k + (T+r)*k*bn + (T+r)*bm*bn + bm*T*bn
+(k resident like the fused-head kernel; callers shrink bm/bn for large k).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.coded_layer import folded_slot_map
+
+
+def eq12_plan(spec, valid: jax.Array, valid_parity: jax.Array,
+              m_l: int) -> tuple[jax.Array, jax.Array]:
+    """Per-output-column decode plan for the <=1-erasure regime.
+
+    Returns (esel [m_l] int32, coef [m_l] f32): column c of a missing
+    shard d is rebuilt as  coef[c] * (p_{esel[c]} - sum_i gen[esel[c],i]
+    * y_i)  with coef = 1/gen[esel[c], d]. Dedicated layout (parity rows
+    intact) always uses the sum row (esel=0, coef=1). Folded layout picks,
+    per slice, the lowest-index equation whose staggered parity slice is
+    still on a healthy device — the same top-1 selection as
+    ``core.decode_folded``, so fused ≡ reference under every in-budget
+    mask. Fully traceable: the mask stays a runtime array.
+    """
+    code = spec.code
+    T, r = code.n_shards, code.n_parity
+    gen = jnp.asarray(code.generator, jnp.float32)          # [r, T]
+    d = jnp.argmin(valid)               # first dead shard (0 if none dead)
+    if spec.layout == "folded" and r > 1 and m_l % T == 0:
+        w = m_l // T
+        smap = jnp.asarray(folded_slot_map(T, r))           # [r, T]
+        pv = valid_parity[smap]                             # [r, T] alive?
+        eq_score = jnp.where(pv, 1.0, -1.0) \
+            - jnp.arange(r, dtype=jnp.float32)[:, None] * 1e-3
+        esel = jnp.repeat(jnp.argmax(eq_score, axis=0).astype(jnp.int32),
+                          w, total_repeat_length=m_l)
+    else:
+        esel = jnp.zeros((m_l,), jnp.int32)
+    coef = (1.0 / gen[esel, d]).astype(jnp.float32)         # [m_l]
+    return esel, coef
+
+
+def _decode_combine(y, p, gen, valid, esel, coef):
+    """Shared in-register tail: zero dead shards, Eq. 12-reconstruct the
+    missing one from its selected parity equation, emit merged layout.
+
+    y: [T, bm, bn], p: [r, bm, bn] (f32); returns [bm, T, bn] f32."""
+    T = y.shape[0]
+    r = p.shape[0]
+    vmask = valid[:, None, None]
+    yz = jnp.where(vmask, y, 0.0)
+    # residual_j = p_j - sum_i gen[j, i] * y_i  (dead shards zeroed above)
+    residual = p - jnp.tensordot(gen, yz, axes=[[1], [0]])  # [r, bm, bn]
+    # per-column equation pick (esel) without NaN propagation from
+    # never-selected rows: where(), not a multiply-by-onehot
+    rows = jax.lax.broadcasted_iota(jnp.int32, (r, y.shape[2]), 0)
+    onehot = rows == esel[None, :]                          # [r, bn]
+    pick = jnp.sum(jnp.where(onehot[:, None, :], residual, 0.0), axis=0)
+    missing = pick * coef[None, :]                          # [bm, bn]
+    out = jnp.where(vmask, yz, missing[None])               # [T, bm, bn]
+    return jnp.moveaxis(out, 0, 1)                          # [bm, T, bn]
+
+
+# ------------------------------------------------- fused coded matmul ----
+
+def _coded_matmul_kernel(valid_ref, esel_ref, coef_ref, gen_ref, x_ref,
+                         w_ref, pw_ref, *rest, fuse_norm: bool, eps: float):
+    if fuse_norm:
+        gamma_ref, o_ref = rest
+    else:
+        (o_ref,) = rest
+    x = x_ref[...].astype(jnp.float32)                      # [bm, k]
+    if fuse_norm:
+        var = jnp.mean(x * x, axis=-1, keepdims=True)
+        x = x * jax.lax.rsqrt(var + eps) \
+            * gamma_ref[...].astype(jnp.float32)[None]
+    w = w_ref[...].astype(jnp.float32)                      # [T, k, bn]
+    pw = pw_ref[...].astype(jnp.float32)                    # [r, k, bn]
+    # the T shard GEMMs + the r parity GEMMs for this tile (MXU)
+    y = jnp.einsum("bk,tkn->tbn", x, w,
+                   preferred_element_type=jnp.float32)
+    p = jnp.einsum("bk,rkn->rbn", x, pw,
+                   preferred_element_type=jnp.float32)
+    out = _decode_combine(y, p, gen_ref[...].astype(jnp.float32),
+                          valid_ref[...], esel_ref[...], coef_ref[...])
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "eps", "out_dtype",
+                                             "interpret"))
+def cdc_coded_matmul_pallas(x: jax.Array, w_shards: jax.Array,
+                            parity_w: jax.Array, gen: jax.Array,
+                            esel: jax.Array, coef: jax.Array,
+                            valid: jax.Array, *, gamma: jax.Array | None
+                            = None, eps: float = 1e-5, bm: int = 128,
+                            bn: int = 128, out_dtype=None,
+                            interpret: bool = False) -> jax.Array:
+    """Fused (rmsnorm?) + coded shard GEMMs + Eq. 12 decode + merge.
+
+    x:        [rows, k] activations (pre-norm when ``gamma`` is given).
+    w_shards: [T, k, m_l] column shards of the weight.
+    parity_w: [r, k, m_l] parity weights in UNFOLDED/dedicated layout
+              (callers unfold the slot-major folded layout first).
+    gen:      [r, T] generator rows; esel/coef: the ``eq12_plan``.
+    valid:    [T] bool; at most ONE False (callers fall back beyond).
+
+    Returns merged [rows, T, m_l] — ``reshape(rows, T*m_l)`` IS the
+    merged activation (merge order is written directly; no transpose,
+    no per-shard HBM array ever exists).
+    """
+    rows, k = x.shape
+    t, k2, m_l = w_shards.shape
+    r = parity_w.shape[0]
+    assert k == k2, (x.shape, w_shards.shape)
+    out_dtype = out_dtype or x.dtype
+    bm, bn = min(bm, rows), min(bn, m_l)
+    rows_p = -(-rows // bm) * bm
+    m_l_p = -(-m_l // bn) * bn
+    if rows_p != rows:
+        x = jnp.pad(x, ((0, rows_p - rows), (0, 0)))
+    if m_l_p != m_l:
+        padn = ((0, 0), (0, 0), (0, m_l_p - m_l))
+        w_shards = jnp.pad(w_shards, padn)
+        parity_w = jnp.pad(parity_w, padn)
+        esel = jnp.pad(esel, (0, m_l_p - m_l))
+        coef = jnp.pad(coef, (0, m_l_p - m_l), constant_values=1.0)
+    fuse_norm = gamma is not None
+    kernel = functools.partial(_coded_matmul_kernel, fuse_norm=fuse_norm,
+                               eps=eps)
+    in_specs = [
+        pl.BlockSpec((t,), lambda i, j: (0,)),
+        pl.BlockSpec((bn,), lambda i, j: (j,)),
+        pl.BlockSpec((bn,), lambda i, j: (j,)),
+        pl.BlockSpec((r, t), lambda i, j: (0, 0)),
+        pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+        pl.BlockSpec((t, k, bn), lambda i, j: (0, 0, j)),
+        pl.BlockSpec((r, k, bn), lambda i, j: (0, 0, j)),
+    ]
+    args = [valid, esel, coef, gen, x, w_shards, parity_w]
+    if fuse_norm:
+        in_specs.append(pl.BlockSpec((k,), lambda i, j: (0,)))
+        args.append(gamma)
+    out = pl.pallas_call(
+        kernel,
+        grid=(rows_p // bm, m_l_p // bn),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, t, bn), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((rows_p, t, m_l_p), out_dtype),
+        interpret=interpret,
+    )(*args)
+    if rows_p != rows or m_l_p != m_l:
+        out = out[:rows, :, :m_l]
+    return out
+
+
+# --------------------------------------------------- decode-and-merge ----
+
+def _decode_merge_kernel(valid_ref, esel_ref, coef_ref, gen_ref, y_ref,
+                         p_ref, o_ref):
+    out = _decode_combine(y_ref[...].astype(jnp.float32),
+                          p_ref[...].astype(jnp.float32),
+                          gen_ref[...].astype(jnp.float32),
+                          valid_ref[...], esel_ref[...], coef_ref[...])
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "out_dtype",
+                                             "interpret"))
+def cdc_decode_merge_pallas(ys: jax.Array, parity: jax.Array,
+                            gen: jax.Array, esel: jax.Array,
+                            coef: jax.Array, valid: jax.Array, *,
+                            bm: int = 128, bn: int = 128, out_dtype=None,
+                            interpret: bool = False) -> jax.Array:
+    """Eq. 12 decode + merge of already-computed shard outputs.
+
+    ys: [T, rows, m_l] shard outputs; parity: [r, rows, m_l] UNFOLDED
+    parity outputs; valid: [T] bool, at most one False. Returns merged
+    [rows, T, m_l] (reshape to [rows, T*m_l] is free). One fused
+    elementwise pass: the stacked shard outputs are read once and only
+    the merged activation is written.
+    """
+    t, rows, m_l = ys.shape
+    r = parity.shape[0]
+    out_dtype = out_dtype or ys.dtype
+    bm, bn = min(bm, rows), min(bn, m_l)
+    rows_p = -(-rows // bm) * bm
+    m_l_p = -(-m_l // bn) * bn
+    if rows_p != rows or m_l_p != m_l:
+        pad = ((0, 0), (0, rows_p - rows), (0, m_l_p - m_l))
+        ys = jnp.pad(ys, pad)
+        parity = jnp.pad(parity, pad)
+        esel = jnp.pad(esel, (0, m_l_p - m_l))
+        coef = jnp.pad(coef, (0, m_l_p - m_l), constant_values=1.0)
+    out = pl.pallas_call(
+        _decode_merge_kernel,
+        grid=(rows_p // bm, m_l_p // bn),
+        in_specs=[
+            pl.BlockSpec((t,), lambda i, j: (0,)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+            pl.BlockSpec((r, t), lambda i, j: (0, 0)),
+            pl.BlockSpec((t, bm, bn), lambda i, j: (0, i, j)),
+            pl.BlockSpec((r, bm, bn), lambda i, j: (0, i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, t, bn), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((rows_p, t, m_l_p), out_dtype),
+        interpret=interpret,
+    )(valid, esel, coef, gen, ys, parity)
+    if rows_p != rows or m_l_p != m_l:
+        out = out[:rows, :, :m_l]
+    return out

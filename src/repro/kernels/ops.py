@@ -10,17 +10,35 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.cdc_decode import (cdc_decode_pallas,
                                       cdc_fused_head_argmax_pallas)
 from repro.kernels.cdc_encode import cdc_encode_pallas
+from repro.kernels.cdc_matmul import (cdc_coded_matmul_pallas,
+                                      cdc_decode_merge_pallas, eq12_plan)
 from repro.kernels.matmul import matmul_pallas
 from repro.kernels.rmsnorm import rmsnorm_pallas
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _concrete_dead(valid) -> int | None:
+    """Number of dead shards when the mask is host-concrete, else None.
+
+    Traced masks (inside jit) cannot be counted at trace time — the
+    <=1-erasure gate for the fused kernels then falls to the CALLER
+    (``executor.vstep`` host-checks the mask before dispatching a fused
+    round)."""
+    if valid is None:
+        return 0
+    if isinstance(valid, jax.core.Tracer):
+        return None
+    v = np.asarray(valid)
+    return int(v.size - v.sum())
 
 
 def matmul(x, w, *, out_dtype=None, use_pallas=True, **block_kw):
@@ -39,6 +57,17 @@ def cdc_encode(w_shards, gen, *, use_pallas=True, **block_kw):
 
 
 def cdc_decode(y_shards, parity, valid, *, use_pallas=True, **block_kw):
+    """r=1 Eq. 12 recovery combine; <=1 erased shard by construction.
+
+    A host-concrete mask with 2+ erasures raises (a single sum parity
+    cannot solve for two unknowns); the r>1 MDS layouts decode via
+    ``core.coded_layer`` / ``fused_decode_merge`` instead.
+    """
+    dead = _concrete_dead(valid)
+    if dead is not None and dead > 1:
+        raise ValueError(
+            f"cdc_decode is the r=1 Eq. 12 combine (one parity equation) "
+            f"and recovers at most 1 erased shard, got {dead} dead")
     if not use_pallas:
         return ref.cdc_decode_ref(y_shards, parity, valid)
     return cdc_decode_pallas(y_shards, parity, valid,
@@ -50,13 +79,120 @@ def fused_head_argmax(x, w_shards, parity_w, valid, *, vocab,
     """Fused coded LM-head GEMM + Eq. 12 parity decode + greedy argmax.
 
     The batched executor's decode hot path: one kernel per round, the
-    merged [b, vocab] logits never hit HBM. Handles <= 1 erased shard.
+    merged [b, vocab] logits never hit HBM. Handles <= 1 erased shard
+    (both the kernel and the ref oracle consume only the SUM parity row):
+    a host-concrete mask with 2+ erasures raises instead of silently
+    decoding garbage — multi-erasure rounds belong to the reference MDS
+    path, which ``executor.vstep`` selects before dispatch (traced masks
+    are the caller's contract for the same reason, see _concrete_dead).
     """
+    dead = _concrete_dead(valid)
+    if dead is not None and dead > 1:
+        raise ValueError(
+            f"fused_head_argmax recovers at most 1 erased shard (Eq. 12 "
+            f"sum-parity regime), got {dead} dead; use the reference "
+            f"decode path (full logits + MDS recovery) for this round")
     if not use_pallas:
         return ref.fused_head_argmax_ref(x, w_shards, parity_w, valid, vocab)
     return cdc_fused_head_argmax_pallas(x, w_shards, parity_w, valid,
                                         vocab=vocab, interpret=_interpret(),
                                         **block_kw)
+
+
+def fused_coded_matmul(x, w, w_cdc, spec, valid, *, valid_parity=None,
+                       gamma=None, eps=1e-5, use_pallas=True,
+                       out_dtype=None, **block_kw):
+    """Fused in-body coded GEMM: (rmsnorm?) + T shard GEMMs + r parity
+    GEMMs + Eq. 12 decode + merge in ONE kernel — per-shard outputs never
+    round-trip HBM.
+
+    x: [..., k]; w: [k, m] (column-sharded logical weight); w_cdc: parity
+    weights in either layout (folded slots are unfolded host-side — the
+    kernel always sees dedicated [r, k, m_l] parity). Returns the merged
+    [..., m] activation, matching ``core.coded_matmul`` bit-close under
+    every in-budget <=1-erasure mask.
+
+    Fallback ladder (never a silent wrong answer):
+      * host-concrete mask with 2+ dead  -> reference ``coded_matmul``
+        (full MDS recovery, exact reference semantics);
+      * traced mask -> kernel unconditionally; the caller must gate
+        (vstep host-checks <=1 dead before dispatching a fused round);
+      * ``use_pallas=False`` -> the ``ref.py`` oracle (same plan + math).
+    """
+    from repro.core import coded_layer
+    code = spec.code
+    T, r = code.n_shards, code.n_parity
+    dead = _concrete_dead(valid)
+    if w_cdc is None or r == 0 or valid is None \
+            or (dead is not None and dead > 1):
+        xn = ref.rmsnorm_ref(x, gamma, eps) if gamma is not None else x
+        return coded_layer.coded_matmul(xn, w, w_cdc, spec, valid,
+                                        valid_parity=valid_parity)
+    valid = jnp.asarray(valid)
+    if valid_parity is None:
+        valid_parity = valid
+    k, m = w.shape
+    m_l = m // T
+    w_st = jnp.moveaxis(w.reshape(k, T, m_l), 1, 0)        # [T, k, m_l]
+    if spec.layout == "dedicated":
+        pw = w_cdc                                         # [r, k, m_l]
+    else:
+        pw = coded_layer.unfold_parity(w_cdc, T, r)        # -> [r, k, m_l]
+    gen = jnp.asarray(code.generator, jnp.float32)
+    esel, coef = eq12_plan(spec, valid, valid_parity, m_l)
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, k)
+    if not use_pallas:
+        out = ref.cdc_coded_matmul_ref(xf, w_st, pw, gen, esel, coef,
+                                       valid, gamma=gamma, eps=eps,
+                                       out_dtype=out_dtype)
+    else:
+        out = cdc_coded_matmul_pallas(xf, w_st, pw, gen, esel, coef, valid,
+                                      gamma=gamma, eps=eps,
+                                      out_dtype=out_dtype,
+                                      interpret=_interpret(), **block_kw)
+    return out.reshape(lead + (m,))
+
+
+def fused_decode_merge(ys, parity, spec, valid, *, valid_parity=None,
+                       use_pallas=True, out_dtype=None, **block_kw):
+    """Fused Eq. 12 decode + merge of already-computed shard outputs —
+    the ``core.decode_and_merge`` tail (e.g. outputs gathered by
+    ``dist.collectives``) as one kernel pass.
+
+    ys: [T, ..., m_l]; parity: dedicated [r, ..., m_l] or folded slots
+    [T, ..., r*w] (unfolded host-side). Same <=1-erasure regime and
+    fallback ladder as ``fused_coded_matmul``.
+    """
+    from repro.core import coded_layer
+    code = spec.code
+    T, r = code.n_shards, code.n_parity
+    dead = _concrete_dead(valid)
+    if parity is None or r == 0 or valid is None \
+            or (dead is not None and dead > 1):
+        return coded_layer.decode_and_merge(ys, parity, spec, valid,
+                                            valid_parity=valid_parity)
+    valid = jnp.asarray(valid)
+    if valid_parity is None:
+        valid_parity = valid
+    m_l = ys.shape[-1]
+    if spec.layout == "dedicated":
+        par = parity                                       # [r, ..., m_l]
+    else:
+        par = coded_layer.unfold_parity(parity, T, r)      # -> [r, ..., m_l]
+    gen = jnp.asarray(code.generator, jnp.float32)
+    esel, coef = eq12_plan(spec, valid, valid_parity, m_l)
+    mid = ys.shape[1:-1]
+    ysf = ys.reshape(T, -1, m_l)
+    parf = par.reshape(r, -1, m_l)
+    if not use_pallas:
+        out = ref.cdc_decode_merge_ref(ysf, parf, gen, esel, coef, valid,
+                                       out_dtype=out_dtype)
+    else:
+        out = cdc_decode_merge_pallas(ysf, parf, gen, esel, coef, valid,
+                                      out_dtype=out_dtype,
+                                      interpret=_interpret(), **block_kw)
+    return out.reshape(mid + (T * m_l,))
 
 
 def rmsnorm(x, gamma, *, eps=1e-6, use_pallas=True, **block_kw):

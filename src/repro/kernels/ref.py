@@ -44,6 +44,57 @@ def fused_head_argmax_ref(x: jax.Array, w_shards: jax.Array,
             jnp.max(merged, axis=-1))
 
 
+def _eq12_combine_ref(y: jax.Array, p: jax.Array, gen: jax.Array,
+                      valid: jax.Array, esel: jax.Array,
+                      coef: jax.Array) -> jax.Array:
+    """Shared Eq. 12 tail of the in-body kernels: zero dead shards,
+    rebuild the missing one from its selected parity equation, emit the
+    merged [rows, T, m_l] layout. y: [T, rows, m_l] f32, p: [r, rows, m_l]
+    f32, esel/coef: per-column plan from ``cdc_matmul.eq12_plan``."""
+    vmask = valid[:, None, None]
+    yz = jnp.where(vmask, y, 0.0)
+    residual = p - jnp.tensordot(gen.astype(jnp.float32), yz,
+                                 axes=[[1], [0]])          # [r, rows, m_l]
+    onehot = jnp.arange(p.shape[0])[:, None] == esel[None, :]   # [r, m_l]
+    pick = jnp.sum(jnp.where(onehot[:, None, :], residual, 0.0), axis=0)
+    missing = pick * coef[None, :].astype(jnp.float32)
+    out = jnp.where(vmask, yz, missing[None])
+    return jnp.moveaxis(out, 0, 1)                         # [rows, T, m_l]
+
+
+def cdc_coded_matmul_ref(x: jax.Array, w_shards: jax.Array,
+                         parity_w: jax.Array, gen: jax.Array,
+                         esel: jax.Array, coef: jax.Array,
+                         valid: jax.Array, *, gamma: jax.Array | None = None,
+                         eps: float = 1e-5, out_dtype=None) -> jax.Array:
+    """Oracle for ``cdc_coded_matmul_pallas``: (rmsnorm?) + T shard GEMMs
+    + r parity GEMMs + in-register Eq. 12 decode + merge, all f32.
+    Returns merged [rows, T, m_l]."""
+    xf = x.astype(jnp.float32)
+    if gamma is not None:
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        xf = xf * jax.lax.rsqrt(var + eps) \
+            * gamma.astype(jnp.float32)[None]
+    y = jnp.einsum("bk,tkn->tbn", xf, w_shards.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    p = jnp.einsum("bk,rkn->rbn", xf, parity_w.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    out = _eq12_combine_ref(y, p, gen, valid, esel, coef)
+    return out.astype(out_dtype or x.dtype)
+
+
+def cdc_decode_merge_ref(ys: jax.Array, parity: jax.Array, gen: jax.Array,
+                         esel: jax.Array, coef: jax.Array,
+                         valid: jax.Array, out_dtype=None) -> jax.Array:
+    """Oracle for ``cdc_decode_merge_pallas``: Eq. 12 decode + merge of
+    already-computed shard outputs ys [T, rows, m_l] with UNFOLDED parity
+    [r, rows, m_l]. Returns merged [rows, T, m_l]."""
+    out = _eq12_combine_ref(ys.astype(jnp.float32),
+                            parity.astype(jnp.float32), gen, valid, esel,
+                            coef)
+    return out.astype(out_dtype or ys.dtype)
+
+
 def rmsnorm_ref(x: jax.Array, gamma: jax.Array, eps: float = 1e-6
                 ) -> jax.Array:
     xf = x.astype(jnp.float32)

@@ -97,7 +97,9 @@ def main():
     ap.add_argument("--no-overlap", action="store_true",
                     help="harvest each round synchronously (no pipelining)")
     ap.add_argument("--fused", action="store_true",
-                    help="force the Pallas fused head (interpret off-TPU)")
+                    help="force the full-Pallas round: fused in-body coded "
+                         "GEMM+decode kernels and the fused head (interpret "
+                         "off-TPU; default auto = native TPU only)")
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="per-request SLO deadline after arrival")
     ap.add_argument("--max-queue-depth", type=int, default=None,

@@ -43,6 +43,12 @@ class TPCtx:
     fsdp: str | None = "data"      # FSDP axis name (weights)
     seq_axis: str | None = None    # SP: shard sequence dim of activations
     moe_capacity: float = 1.25     # MoE capacity factor (<= 0: no dropping)
+    fused_body: bool = False       # route coded GEMMs through the fused
+    #                                Pallas kernel (shard GEMMs + Eq. 12
+    #                                decode + merge in-register). Only valid
+    #                                in the <=1-erasure regime — the
+    #                                executor host-gates the mask before
+    #                                tracing with a fused_body ctx.
 
     @property
     def coded(self) -> bool:
@@ -103,7 +109,8 @@ def col_dense(ctx: TPCtx, p: Params, x: jax.Array, out_dim: int,
     """Column-parallel (output-split) GEMM — CODEABLE (paper Table 1)."""
     w = p["w"]
     if ctx.coded and "cdc" in p:
-        y = coded_matmul(x, w, p["cdc"], ctx.spec, valid)
+        y = coded_matmul(x, w, p["cdc"], ctx.spec, valid,
+                         use_fused=ctx.fused_body)
         y = ctx.shard_act(y)          # merged output, replicated over TP
     else:
         y = x @ w

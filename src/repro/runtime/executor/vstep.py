@@ -13,16 +13,24 @@ Two compiled variants exist, both traced exactly once:
 
   * reference — the model's coded decode returning full last-position
     logits (what the equivalence and erasure-sweep tests pin down);
-  * fused     — the model body up to the final norm, then the Pallas
-    fused coded-head kernel (``kernels.cdc_decode``): head GEMM + Eq. 12
-    parity decode + greedy argmax in one kernel, logits never hitting HBM.
-    Valid for <= 1 erased shard (the sum-parity regime); rounds beyond
-    that fall back to the reference path. Off TPU the kernel runs in
-    Pallas interpret mode; ``use_fused="auto"`` therefore enables it only
-    where it compiles natively.
+  * fused     — the FULL-Pallas round: the model body runs with
+    ``ctx.fused_body=True`` so every in-body coded GEMM (attention QKV,
+    FFN up/gate) goes through ``kernels.cdc_matmul`` — shard GEMMs +
+    Eq. 12 parity decode + merge in ONE kernel, per-shard outputs never
+    materialised in HBM — and the final norm feeds the Pallas fused
+    coded-head kernel (``kernels.cdc_decode``): head GEMM + parity
+    decode + greedy argmax, logits never hitting HBM either.
+    Valid for <= 1 erased shard (the in-register Eq. 12 regime); rounds
+    beyond that fall back to the reference path — ``round()`` counts the
+    host mask BEFORE dispatch, so a 2+-erasure round (in budget only for
+    the dedicated layout) always gets the reference MDS decode, never a
+    silent wrong answer. Off TPU the kernels run in Pallas interpret
+    mode; ``use_fused="auto"`` therefore enables them only where they
+    compile natively.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any
 
 import jax
@@ -73,9 +81,15 @@ class VStep:
 
         def _round_fused(params, state, toks, valid, w_shards, parity_w):
             self.n_traces += 1
-            hidden, new_state = stepper.model.decode(params, state, toks,
-                                                     valid,
-                                                     return_hidden=True)
+            # fused-body context: every in-body coded GEMM of this trace
+            # goes through the fused Pallas kernel (cdc_matmul). Built at
+            # trace time from the CURRENT model so set_code_r retraces
+            # with the new geometry, like the reference closure.
+            model = stepper.model
+            fm = dataclasses.replace(
+                model, ctx=dataclasses.replace(model.ctx, fused_body=True))
+            hidden, new_state = fm.decode(params, state, toks, valid,
+                                          return_hidden=True)
             tok, _ = ops.fused_head_argmax(
                 hidden[:, -1, :].astype(jnp.float32), w_shards, parity_w,
                 valid, vocab=stepper.model.cfg.vocab)

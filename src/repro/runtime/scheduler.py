@@ -64,7 +64,8 @@ class RuntimeConfig:
     max_rounds: int = 100_000
     batched: bool | None = None      # None: auto (batched when supported)
     overlap: bool = True             # pipeline host work with device rounds
-    use_fused: bool | str = "auto"   # Pallas fused head in the round
+    use_fused: bool | str = "auto"   # full-Pallas round: fused in-body
+    #                                  coded GEMM+decode kernels + fused head
     max_queue_depth: int | None = None   # shed beyond this depth
 
     def __post_init__(self):

@@ -204,6 +204,88 @@ def test_fused_round_matches_reference(zoo):
                                       np.asarray(toks_ref))
 
 
+# ------------------------------------- (d') fused IN-BODY kernels ----
+
+def test_fused_body_scheduler_stream_matches(zoo):
+    """Full-Pallas rounds (fused in-body coded GEMMs + fused head) under
+    the real scheduler: the complete token stream equals the reference
+    path token-for-token per arch, fault-free AND across every in-budget
+    mid-run erasure, with the one-trace pin intact."""
+    cfg, stepper = zoo
+    arrivals = _staggered(cfg, 4)
+    _, toks_ref = _serve(stepper, arrivals, batched=True, use_fused=False)
+    s_fused, toks_fused = _serve(stepper, arrivals, batched=True,
+                                 use_fused=True)
+    assert toks_fused == toks_ref, f"{cfg.name}: fused-body stream diverged"
+    assert s_fused.executor.vstep.use_fused
+    assert s_fused.executor.vstep.n_traces == 1, \
+        "fused round retraced mid-run"
+    for shard in range(T):
+        s_f, toks_f = _serve(stepper, arrivals, batched=True,
+                             use_fused=True, events=[erasure(2.0, shard)])
+        assert toks_f == toks_ref, \
+            f"{cfg.name}: fused-body stream diverged under erasure of " \
+            f"shard {shard}"
+        assert s_f.metrics.counters["erasures_recovered"] == 1
+        assert s_f.executor.vstep.n_traces == 1
+
+
+def test_fused_one_round_is_one_dispatch_one_trace(zoo):
+    """The (c) pin holds when the in-body kernels swap in: one jitted
+    dispatch per round, one trace ever, ``decode_one`` untouched."""
+    cfg, stepper = zoo
+    calls = {"decode_one": 0}
+    orig = stepper.decode_one
+    stepper.decode_one = lambda *a, **k: calls.__setitem__(
+        "decode_one", calls["decode_one"] + 1) or orig(*a, **k)
+    try:
+        sched, toks = _serve(stepper, _staggered(cfg, 6), batched=True,
+                             n_slots=3, use_fused=True)
+    finally:
+        stepper.decode_one = orig
+    assert calls["decode_one"] == 0
+    vstep = sched.executor.vstep
+    assert vstep.n_traces == 1
+    assert vstep.n_dispatches == sched.metrics.counters["decode_rounds"]
+    assert sched.metrics.counters["requests_completed"] == 6
+
+
+def test_fused_multi_erasure_round_takes_reference_path():
+    """Erasure-limit regression (satellite): the fused kernels cover <=1
+    erased shard; a dedicated-layout round with TWO in-budget erasures
+    must drop to the reference MDS path (full logits materialised) and
+    still produce the reference tokens — graceful fallback, not a wrong
+    answer."""
+    cfg = smoke_config(get_arch("granite-3-8b"))
+    model = build(cfg, TPCtx(tp=T, mode="coded", code_r=2,
+                             code_layout="dedicated", moe_capacity=0))
+    params = model.init(jax.random.PRNGKey(0))
+    stepper = ModelStepper(model, params, max_len=32)
+    assert stepper.erasure_budget == 2
+    rng = np.random.default_rng(9)
+    ex = SlotPoolExecutor(stepper, n_slots=2, overlap=False)
+    full = np.ones(T, bool)
+    for i in range(2):
+        ex.admit(i, rng.integers(0, cfg.vocab, 5), full, tag=i)
+    ref_step = VStep(stepper, use_fused=False)
+    fused_step = VStep(stepper, use_fused=True)
+    assert fused_step.use_fused
+    mask2 = np.array([True, False, False, True])   # in budget (dedicated)
+    _, toks_ref, logits_ref = ref_step.round(ex.state, ex.last_toks, mask2)
+    _, toks_f, logits_f = fused_step.round(ex.state, ex.last_toks, mask2)
+    assert logits_f is not None, \
+        "2-erasure round must take the reference path (full logits)"
+    np.testing.assert_array_equal(np.asarray(toks_f), np.asarray(toks_ref))
+    np.testing.assert_allclose(np.asarray(logits_f),
+                               np.asarray(logits_ref), rtol=1e-5, atol=1e-5)
+    # and a 1-erasure round on the same VStep still takes the kernel
+    mask1 = np.array([True, False, True, True])
+    _, toks_f1, logits_f1 = fused_step.round(ex.state, ex.last_toks, mask1)
+    assert logits_f1 is None
+    _, toks_r1, _ = ref_step.round(ex.state, ex.last_toks, mask1)
+    np.testing.assert_array_equal(np.asarray(toks_f1), np.asarray(toks_r1))
+
+
 # --------------------------------- (e) property: slot isolation ----
 
 def _snapshot(ex, slot):
