@@ -61,14 +61,16 @@ def _workload(cfg, n_requests: int, prompt_len: int, gen_tokens: int,
 
 
 def _run(stepper, workload, trace, *, seed: int, adapt: bool = False,
-         plan_window_ms: float = 200.0, max_budget: int = 2) -> dict:
+         plan_window_ms: float = 200.0, max_budget: int = 2,
+         perf: bool = False) -> dict:
     injector = TraceInjector(trace, stepper.n_shards) if trace else None
     latency = InjectedLatency(LatencySpec(), injector, seed=seed) \
         if injector is not None else None
     health = ShardHealthController(stepper.n_shards, stepper.erasure_budget)
     sched = ContinuousBatchingScheduler(
         stepper, RuntimeConfig(n_slots=DEFAULTS["n_slots"],
-                               straggler=StragglerModel(), seed=seed),
+                               straggler=StragglerModel(), seed=seed,
+                               perf=perf),
         health=health, latency=latency)
     if injector is not None:
         attach_chaos(sched, injector)
@@ -79,10 +81,15 @@ def _run(stepper, workload, trace, *, seed: int, adapt: bool = False,
         attach_planner(sched, planner)
     completed = run_arrivals(sched, workload)
     snap = sched.metrics.snapshot()
+    perf_summary = None
+    if sched.executor is not None and sched.executor.perf is not None:
+        perf_summary = sched.executor.perf.summary(
+            snap["round_latency_measured"].get("p50_ms"))
     return {
         "completed_all": (snap["counters"]["requests_completed"]
                           == snap["counters"]["requests_submitted"]
                           == len(workload)),
+        "perf": perf_summary,
         "tokens": {r.rid: list(r.tokens) for r in completed},
         "counters": snap["counters"],
         "planner": snap["planner"],
@@ -109,7 +116,9 @@ def churn_section(cfg, args) -> dict:
 
     coded = _build_stepper(cfg, args.tp, args.code_r, True, max_len)
     baseline = _run(coded, workload, None, seed=args.seed)
-    faulty = _run(coded, workload, trace, seed=args.seed)
+    # perf accounting on the headline run only: the churn trace never
+    # resizes r, so attribution compiles once and stays valid
+    faulty = _run(coded, workload, trace, seed=args.seed, perf=True)
     uncoded = _build_stepper(cfg, args.tp, args.code_r, False, max_len)
     uncoded_faulty = _run(uncoded, workload, trace, seed=args.seed)
 
@@ -117,7 +126,7 @@ def churn_section(cfg, args) -> dict:
         "trace_events": len(trace),
         "coded": {k: faulty[k] for k in
                   ("completed_all", "counters", "request_latency",
-                   "ttft", "shard_timeline")},
+                   "ttft", "shard_timeline", "perf")},
         "coded_tokens_match_fault_free":
             faulty["tokens"] == baseline["tokens"],
         "uncoded": {k: uncoded_faulty[k] for k in
@@ -195,11 +204,17 @@ def adaptive_section(cfg, args) -> dict:
 
 # ----------------------------------------------------------------- main ----
 
+#: keys every per-arch bench row carries (roofline-anchored attribution)
+PERF_ROW_KEYS = ("model_flops", "achieved_flops_per_s",
+                 "roofline_utilization", "coded_overhead_frac",
+                 "parity_device_equiv")
+
+
 def build_report(args) -> dict:
     cfg = get_arch(args.arch)
     if args.smoke:
         cfg = smoke_config(cfg)
-    return {
+    report = {
         "bench": "chaos_resilience",
         "workload": {"arch": args.arch, "smoke": args.smoke,
                      **{k: getattr(args, k) for k in DEFAULTS}},
@@ -207,13 +222,43 @@ def build_report(args) -> dict:
         "parity_cost": parity_cost_section(args.device_counts),
         "adaptive": adaptive_section(cfg, args),
     }
+    # per-arch roofline attribution of the headline (coded churn) run
+    perf = report["churn"]["coded"].get("perf") or {}
+    report["perf"] = {args.arch: {k: perf.get(k) for k in PERF_ROW_KEYS}}
+    return report
+
+
+def _write_outputs(args, report: dict):
+    if args.out:
+        import os
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True, default=str)
+    if args.bench_out:
+        with open(args.bench_out, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True, default=str)
+    if args.history:
+        from repro.obs.history import append_snapshot
+        churn = report["churn"]["coded"]
+        metrics = {
+            "p99_latency_ms": churn["request_latency"].get("p99_ms"),
+            "ttft_p99_ms": churn["ttft"].get("p99_ms"),
+            **report["perf"][args.arch],
+        }
+        snap = append_snapshot(args.history, bench="chaos_resilience",
+                               arch=args.arch, metrics=metrics)
+        print(f"history: appended chaos_resilience/{args.arch} "
+              f"snapshot to {args.history} (sha {snap['git_sha']})")
 
 
 def run() -> list[dict]:
-    """benchmarks.run entry: smoke-scale rows."""
+    """benchmarks.run entry: smoke-scale rows, refreshing the committed
+    ``BENCH_chaos.json`` artifact and appending one trajectory snapshot to
+    ``BENCH_history.jsonl`` along the way."""
     args = _parse([])
     args.smoke = True
     rep = build_report(args)
+    _write_outputs(args, rep)
     rows = [{"section": "churn",
              "completed_all": rep["churn"]["coded"]["completed_all"],
              "tokens_match": rep["churn"]["coded_tokens_match_fault_free"],
@@ -240,6 +285,9 @@ def _parse(argv=None):
     ap.add_argument("--out", default=None)
     ap.add_argument("--bench-out", default="BENCH_chaos.json",
                     help="headline report path ('' disables)")
+    ap.add_argument("--history", default="BENCH_history.jsonl",
+                    help="append one schema-versioned trajectory snapshot "
+                         "to this JSONL file ('' disables)")
     return ap.parse_args(argv)
 
 
@@ -247,14 +295,7 @@ def main():
     args = _parse()
     report = build_report(args)
     print(json.dumps(report, indent=2, sort_keys=True, default=str))
-    if args.out:
-        import os
-        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
-        with open(args.out, "w") as f:
-            json.dump(report, f, indent=2, sort_keys=True, default=str)
-    if args.bench_out:
-        with open(args.bench_out, "w") as f:
-            json.dump(report, f, indent=2, sort_keys=True, default=str)
+    _write_outputs(args, report)
 
 
 if __name__ == "__main__":

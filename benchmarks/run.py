@@ -3,7 +3,11 @@
 Prints ``name,us_per_call,derived`` CSV per row and dumps the full records
 to results/bench.json. The default set is the fast model-free suites;
 ``--all`` adds the serving benchmarks that build and drive real models
-through the coded runtime (``serve_throughput``, ``chaos_resilience``).
+through the coded runtime (``serve_throughput``, ``chaos_resilience``) —
+their ``run()`` entries also refresh the committed artifacts
+(``BENCH_serve.json``, ``BENCH_chaos.json``) and append one trajectory
+snapshot per bench/arch to ``BENCH_history.jsonl``, so ONE command
+regenerates every artifact the CI perf-trajectory gate checks.
 """
 from __future__ import annotations
 

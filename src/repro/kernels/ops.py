@@ -26,6 +26,98 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+# ------------------------------------------------------- kernel cost model ----
+#
+# On TPU a pallas_call lowers to an opaque ``custom-call`` whose HLO carries
+# no dot ops, so ``roofline.hlo_cost.analyze_hlo`` would count ~0 FLOPs for
+# the fused round (interpret mode on CPU inlines the kernel body into
+# ordinary dots and needs none of this). Each kernel therefore registers a
+# pure shape-based FLOP model keyed by its jitted wrapper name — the name
+# appears verbatim in the custom-call's ``metadata={op_name=...}`` — and the
+# analyzer adds the modelled FLOPs to that instruction. Bytes stay with the
+# analyzer's generic operands+output accounting (the custom-call boundary IS
+# the HBM round trip), so nothing is double-counted.
+#
+# Cost fns take (out_shapes, operand_shapes) — each a list of (dtype,
+# [dims]) in instruction order — and return dot-equivalent FLOPs, matching
+# what the inlined interpret-mode HLO reports for the same kernel.
+
+def _elems(dims) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def _cost_matmul(out, operands):
+    # x [m, k] @ w [k, n] -> [m, n]
+    if not out or len(out[0][1]) != 2 or not operands:
+        return 0.0
+    m, n = out[0][1]
+    k = operands[0][1][-1] if operands[0][1] else 0
+    return 2.0 * m * n * k
+
+
+def _cost_cdc_encode(out, operands):
+    # parity [r, ...] = gen [r, T] @ shards: 2 * out_elems * T
+    t = next((d[1] for _, d in operands if len(d) == 2), 0)
+    return 2.0 * sum(_elems(d) for _, d in out) * t
+
+
+def _cost_cdc_coded_matmul(out, operands):
+    # operand order: [valid, esel, coef, gen, x, w_shards, parity_w, gamma?]
+    # out [rows, T, m_l]; T+r shard GEMMs of x [rows, k] @ [k, m_l]
+    if not out or len(out[0][1]) != 3:
+        return 0.0
+    rows, t, m_l = out[0][1]
+    rank3 = [d for _, d in operands if len(d) == 3]
+    if len(rank3) < 2:
+        return 0.0
+    k = rank3[0][1]            # w_shards [T, k, m_l]
+    r = rank3[1][0]            # parity_w [r, k, m_l]
+    return 2.0 * rows * k * m_l * (t + r)
+
+
+def _cost_cdc_fused_head(out, operands):
+    # operand order: [valid, x [b, k], w_shards [T, k, m_l], parity_w
+    # [k, m_l]]; T shard GEMMs + 1 sum-parity GEMM of [b, k] @ [k, m_l]
+    b = out[0][1][0] if out and out[0][1] else 0
+    w = next((d for _, d in operands if len(d) == 3), None)
+    if w is None:
+        return 0.0
+    t, k, m_l = w
+    return 2.0 * b * k * m_l * (t + 1)
+
+
+def _zero_cost(out, operands):
+    # elementwise decode/normalize kernels: no dot FLOPs (consistent with
+    # analyze_hlo counting only dot/convolution ops)
+    return 0.0
+
+
+#: jitted-wrapper name -> FLOP model; matched against custom-call lines by
+#: LONGEST name containment (``matmul_pallas`` is a substring of
+#: ``cdc_coded_matmul_pallas``).
+KERNEL_COSTS: dict = {}
+
+
+def register_kernel_cost(name: str, fn) -> None:
+    """Register/overwrite the FLOP model for a Pallas kernel wrapper."""
+    KERNEL_COSTS[name] = fn
+
+
+for _name, _fn in (
+        ("matmul_pallas", _cost_matmul),
+        ("cdc_encode_pallas", _cost_cdc_encode),
+        ("cdc_coded_matmul_pallas", _cost_cdc_coded_matmul),
+        ("cdc_fused_head_argmax_pallas", _cost_cdc_fused_head),
+        ("cdc_decode_merge_pallas", _zero_cost),
+        ("cdc_decode_pallas", _zero_cost),
+        ("rmsnorm_pallas", _zero_cost),
+):
+    register_kernel_cost(_name, _fn)
+
+
 def _concrete_dead(valid) -> int | None:
     """Number of dead shards when the mask is host-concrete, else None.
 

@@ -128,6 +128,15 @@ def main():
                     help="serve live Prometheus text metrics at "
                          "/metrics (and the trace at /trace) on this "
                          "port; 0 binds an ephemeral port")
+    ap.add_argument("--perf", action="store_true",
+                    help="roofline-anchored round attribution: useful vs "
+                         "parity FLOPs, live coded_overhead_frac, achieved "
+                         "vs roofline utilization (auto-enabled with "
+                         "--trace/--metrics-port/--profile)")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of the run into DIR "
+                         "(rounds annotated as decode_round steps; open "
+                         "with TensorBoard or Perfetto)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -146,12 +155,17 @@ def main():
         if args.fail_time_ms >= 0 else []
     health = ShardHealthController(stepper.n_shards, stepper.erasure_budget,
                                    events=events)
+    # perf accounting rides along whenever any observability sink is on:
+    # the counter track needs it for --trace, the gauges for --metrics-port
+    perf = bool(args.perf or args.trace or args.metrics_port is not None
+                or args.profile)
     rcfg = RuntimeConfig(n_slots=args.batch,
                          batched=False if args.sequential else None,
                          overlap=not args.no_overlap,
                          use_fused=True if args.fused else "auto",
                          max_queue_depth=args.max_queue_depth,
-                         seed=args.seed)
+                         seed=args.seed, perf=perf,
+                         profile=args.profile is not None)
     injector = latency = None
     if args.chaos:
         injector = parse_chaos(args.chaos, stepper.n_shards, seed=args.seed)
@@ -187,6 +201,8 @@ def main():
         return {"frames": rng.normal(
             size=(cfg.enc_seq, cfg.d_model)).astype(np.float32)}
 
+    if args.profile:
+        jax.profiler.start_trace(args.profile)
     if args.deadline_ms is not None:
         for i in range(args.requests):
             t = i * args.arrival_gap_ms
@@ -200,6 +216,9 @@ def main():
                      rng.integers(0, cfg.vocab, args.prompt_len),
                      args.gen_tokens, extras()) for i in range(args.requests)]
         completed = run_arrivals(sched, arrivals)
+    if args.profile:
+        jax.profiler.stop_trace()
+        print(f"profile: wrote jax.profiler trace to {args.profile}")
     mode = "sequential" if sched.executor is None else \
         ("batched+overlap" if rcfg.overlap else "batched")
     print(f"completed {len(completed)}/{args.requests} requests "
@@ -209,6 +228,15 @@ def main():
     if sched.executor is not None:
         print(f"executor: {sched.executor.vstep.n_dispatches} round "
               f"dispatches, {sched.executor.vstep.n_traces} trace(s)")
+        if sched.executor.perf is not None \
+                and sched.executor.perf.n_observed:
+            s = sched.executor.perf.summary()
+            print(f"perf: {s['model_flops'] / 1e6:.2f} MFLOP useful/round "
+                  f"({s['coded_overhead_frac']:.3f} coded overhead, "
+                  f"{s['parity_device_equiv']:.3f} parity device-equiv), "
+                  f"{s['achieved_flops_per_s'] / 1e9:.2f} GFLOP/s achieved, "
+                  f"{s['hbm_gbs']:.2f} GB/s, roofline utilization "
+                  f"{s['roofline_utilization']:.4f} ({s['dominant']}-bound)")
     if injector is not None:
         c = sched.metrics.counters
         print(f"chaos: {c['faults_injected']} injected events, "

@@ -11,10 +11,19 @@ Three pieces, wired through the whole serving stack:
     text exposition, and a live ``/metrics`` server;
   * ``shardlog`` — per-shard health timeline (mask transitions,
     erasure/heal counts, unavailability duty cycles) observed directly
-    from ``ShardHealthController``.
+    from ``ShardHealthController``;
+  * ``perf`` — roofline-anchored per-round cost attribution (useful vs
+    parity FLOPs, live ``coded_overhead_frac``) and achieved-vs-roofline
+    utilization from the measured round latency;
+  * ``history`` — schema-versioned benchmark-trajectory snapshots
+    (``BENCH_history.jsonl``) with a direction-aware regression gate.
 """
 from repro.obs.export import (MetricsServer, chrome_trace, prometheus_text,
                               validate_chrome_trace, write_chrome_trace)
+from repro.obs.history import (DEFAULT_TOLERANCES, append_snapshot,
+                               check_history, compare, load_history,
+                               make_snapshot)
+from repro.obs.perf import PerfMonitor, RoundCost, attribute_round_costs
 from repro.obs.shardlog import ShardTimeline
 from repro.obs.tracer import (EVENT_KINDS, NULL_RECORDER, FlightRecorder,
                               TraceEvent)
@@ -24,4 +33,7 @@ __all__ = [
     "ShardTimeline",
     "MetricsServer", "chrome_trace", "prometheus_text",
     "validate_chrome_trace", "write_chrome_trace",
+    "PerfMonitor", "RoundCost", "attribute_round_costs",
+    "DEFAULT_TOLERANCES", "append_snapshot", "check_history", "compare",
+    "load_history", "make_snapshot",
 ]

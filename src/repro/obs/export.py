@@ -41,12 +41,13 @@ _KNOWN_PHASES = {"X", "i", "I", "M", "b", "e", "n", "s", "t", "f", "C"}
 # ---------------------------------------------------------- chrome trace ----
 
 def _track_order(tracks: list[str]) -> list[str]:
-    """Stable display order: requests, rounds, planner, slots, shards."""
+    """Stable display order: requests, rounds, planner, perf, slots,
+    shards."""
     def key(t: str):
         head, _, idx = t.partition(":")
-        fixed = {"requests": 0, "rounds": 1, "planner": 2,
-                 "slot": 3, "shard": 4}
-        return (fixed.get(head, 5), int(idx) if idx.isdigit() else 0, t)
+        fixed = {"requests": 0, "rounds": 1, "planner": 2, "perf": 3,
+                 "slot": 4, "shard": 5}
+        return (fixed.get(head, 6), int(idx) if idx.isdigit() else 0, t)
     return sorted(set(tracks), key=key)
 
 
@@ -87,7 +88,14 @@ def chrome_trace(recorder: FlightRecorder, shardlog=None,
             "ts": e.t_ms * 1e3,          # trace_event wants microseconds
             "args": args,
         }
-        if e.dur_ms > 0:
+        if e.kind == "perf.counter":
+            # Perfetto counter sample: every numeric arg becomes a series
+            # on the perf track (strings would chart as garbage)
+            rec["ph"] = "C"
+            rec["args"] = {k: v for k, v in args.items()
+                           if isinstance(v, (int, float))
+                           and not isinstance(v, bool)}
+        elif e.dur_ms > 0:
             rec["ph"], rec["dur"] = "X", e.dur_ms * 1e3
         else:
             rec["ph"], rec["s"] = "i", "t"
@@ -126,19 +134,24 @@ def write_chrome_trace(path: str, recorder: FlightRecorder, shardlog=None,
 
 # ------------------------------------------------------------ validation ----
 
-def validate_chrome_trace(trace: Any, require_fault_links: bool = False
-                          ) -> dict:
+def validate_chrome_trace(trace: Any, require_fault_links: bool = False,
+                          require_perf_counters: bool = False) -> dict:
     """Structural + causal validation; raises ``ValueError`` on the first
     violation, returns summary stats otherwise. With
     ``require_fault_links=True`` the trace must contain at least one
     injected fault AND every injected erasure must be linked to its
-    resolution (the CI chaos artifact contract)."""
+    resolution (the CI chaos artifact contract). With
+    ``require_perf_counters=True`` it must carry at least one counter
+    ("C") sample on the ``perf`` track (the perf-observability contract
+    for perf-enabled runs)."""
     if not isinstance(trace, dict) or "traceEvents" not in trace:
         raise ValueError("trace must be a dict with a traceEvents list")
     events = trace["traceEvents"]
     if not isinstance(events, list):
         raise ValueError("traceEvents must be a list")
     names: dict[int, str] = {}
+    n_counters = 0
+    perf_counters = 0
     for i, e in enumerate(events):
         for key in ("name", "ph", "pid", "tid"):
             if key not in e:
@@ -157,6 +170,16 @@ def validate_chrome_trace(trace: Any, require_fault_links: bool = False
             raise ValueError(f"event {i} has negative dur: {e}")
         if e["tid"] not in names and e["tid"] != 0:
             raise ValueError(f"event {i} on unnamed track tid={e['tid']}")
+        if e["ph"] == "C":
+            args = e.get("args")
+            if not isinstance(args, dict) or not args or any(
+                    not isinstance(v, (int, float)) or isinstance(v, bool)
+                    for v in args.values()):
+                raise ValueError(f"counter event {i} must carry a "
+                                 f"non-empty all-numeric args dict: {e}")
+            n_counters += 1
+            if names.get(e["tid"]) == "perf":
+                perf_counters += 1
 
     injected = [e for e in events if e["name"] == "fault.inject"]
     erasures = [e for e in injected if e["args"].get("fault") == "erasure"]
@@ -185,12 +208,17 @@ def validate_chrome_trace(trace: Any, require_fault_links: bool = False
     if require_fault_links and not erasures:
         raise ValueError("trace contains no injected erasures "
                          "(require_fault_links=True)")
+    if require_perf_counters and perf_counters == 0:
+        raise ValueError("trace carries no counter samples on the 'perf' "
+                         "track (require_perf_counters=True)")
     return {
         "n_events": sum(1 for e in events if e["ph"] != "M"),
         "n_tracks": len(names),
         "n_injected": len(injected),
         "n_injected_erasures": len(erasures),
         "n_linked": linked,
+        "n_counters": n_counters,
+        "n_perf_counters": perf_counters,
         "dropped_events": trace.get("otherData", {}).get("dropped_events",
                                                          0),
     }
@@ -251,6 +279,16 @@ def prometheus_text(metrics, shardlog=None, now_ms: float | None = None,
         for i in range(shardlog.n_shards):
             lines.append(f'repro_shard_erasures_total{{shard="{i}"}} '
                          f"{int(shardlog.erasures[i])}")
+    perf = getattr(metrics, "perf", None)
+    if perf:
+        lines.append("# HELP repro_perf Roofline-anchored per-round cost "
+                     "attribution and achieved rates (obs.perf).")
+        lines.append("# TYPE repro_perf gauge")
+        for k in sorted(perf):
+            v = perf[k]
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                continue
+            lines.append(f"repro_perf_{k} {float(v):g}")
     if recorder is not None:
         lines.append("# HELP repro_trace_events_total Events emitted to "
                      "the flight recorder.")
@@ -261,10 +299,10 @@ def prometheus_text(metrics, shardlog=None, now_ms: float | None = None,
 
 
 class MetricsServer:
-    """Minimal live exposition server: ``/metrics`` (Prometheus text) and
-    ``/trace`` (current Chrome trace JSON), served from a daemon thread.
-    ``port=0`` binds an ephemeral port (tests); read it back from
-    ``server.port``."""
+    """Minimal live exposition server: ``/metrics`` (Prometheus text),
+    ``/trace`` (current Chrome trace JSON) and ``/healthz`` (liveness
+    probe), served from a daemon thread. ``port=0`` binds an ephemeral
+    port (tests); read it back from ``server.port``."""
 
     def __init__(self, metrics, shardlog=None, recorder=None, clock=None,
                  port: int = 0, host: str = "127.0.0.1"):
@@ -272,7 +310,10 @@ class MetricsServer:
 
         class Handler(BaseHTTPRequestHandler):
             def do_GET(self):                              # noqa: N802
-                if self.path.rstrip("/") in ("", "/metrics", "metrics"):
+                if self.path.rstrip("/").endswith("healthz"):
+                    body = b"ok\n"
+                    ctype = "text/plain; charset=utf-8"
+                elif self.path.rstrip("/") in ("", "/metrics", "metrics"):
                     body = outer.render_metrics().encode()
                     ctype = "text/plain; version=0.0.4; charset=utf-8"
                 elif self.path.rstrip("/").endswith("trace"):

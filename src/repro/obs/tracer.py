@@ -28,9 +28,12 @@ Event taxonomy (``kind``, dot-namespaced):
      heal + re-encode chain, planner-driven geometry changes
   planner.plan                                  — one planner decision with
      the window stats it saw (est unavailability, window max dead, reason)
+  perf.attribution / perf.counter               — roofline cost attribution
+     (once per code geometry) and the per-harvest achieved-vs-roofline
+     counter samples (``obs.perf``; rendered as Perfetto counter tracks)
 
 ``track`` names the Perfetto track the event renders on: ``requests``,
-``rounds``, ``planner``, ``slot:<i>``, ``shard:<i>``.
+``rounds``, ``planner``, ``perf``, ``slot:<i>``, ``shard:<i>``.
 
 Disabled cost is one branch: call sites guard on ``tracer.enabled``
 before building kwargs, and ``NULL_RECORDER`` (the default everywhere)
@@ -53,6 +56,7 @@ EVENT_KINDS = frozenset({
     "fault.inject", "fault.recovered", "fault.beyond_budget", "fault.noop",
     "shard.heal", "shard.heal_all", "code.reencode", "code.resize",
     "planner.plan",
+    "perf.attribution", "perf.counter",
 })
 
 

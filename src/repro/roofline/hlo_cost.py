@@ -16,6 +16,16 @@ roofline needs a loop-aware model. This module parses the compiled module:
       fusion calls contribute flops only (their bytes are the fusion
       boundary, already counted at the call site)
   * total = weighted sum over the ENTRY computation.
+
+Pallas custom-calls: on TPU a pallas_call is an opaque ``custom-call``
+with zero visible dots, so the fused coded round used to report ~0 FLOPs.
+Each kernel wrapper registers a shape-based FLOP model in
+``repro.kernels.ops.KERNEL_COSTS`` keyed by its jitted wrapper name (which
+appears in the instruction's ``metadata={op_name=...}``); matching
+instructions get the modelled FLOPs (bytes stay with the generic
+operands+output accounting — the call boundary IS the HBM round trip).
+Unmatched opaque custom-calls are counted in ``custom_calls_uncosted`` so
+missing annotations are visible instead of silently zero.
 """
 from __future__ import annotations
 
@@ -39,6 +49,36 @@ _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 _OPERANDS_RE = re.compile(r"\(%([\w\.\-]+)(?:,\s*%([\w\.\-]+))*")
 _GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+def _kernel_cost_registry() -> dict:
+    """Lazy import: the analyzer must stay usable without jax/kernels."""
+    try:
+        from repro.kernels.ops import KERNEL_COSTS
+        return KERNEL_COSTS
+    except Exception:
+        return {}
+
+
+def _custom_call_flops(rhs: str, shape_str: str,
+                       shapes: dict[str, str]) -> tuple[float, bool]:
+    """(modelled FLOPs, matched?) for one custom-call instruction."""
+    registry = _kernel_cost_registry()
+    match = max((k for k in registry if k in rhs), key=len, default=None)
+    if match is None:
+        return 0.0, False
+    args_sec = rhs[rhs.index("(") + 1:] if "(" in rhs else ""
+    args_sec = args_sec.split("),")[0]
+    operands = []
+    for on in re.findall(r"%([\w\.\-]+)", args_sec):
+        if on in shapes:
+            operands.extend(_dims(shapes[on]))
+    if not operands:                     # inline-typed operands only
+        operands = _dims(args_sec)
+    try:
+        return float(registry[match](_dims(shape_str), operands)), True
+    except Exception:
+        return 0.0, False
+
 
 _CONTROL_OPS = {
     "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
@@ -99,6 +139,7 @@ def analyze_hlo(text: str) -> dict:
 
     # ---- pass 2: per-computation local costs + child edges ----
     local = {c: {"flops": 0.0, "bytes": 0.0, "wire": 0.0,
+                 "cc_costed": 0.0, "cc_uncosted": 0.0,
                  "wire_by_kind": defaultdict(float),
                  "coll_counts": defaultdict(int)}
              for c in comps}
@@ -115,6 +156,17 @@ def analyze_hlo(text: str) -> dict:
             shape_str = shapes.get(name, "")
             opm = _OP_RE.match(rhs)
             op = opm.group(1) if opm else ""
+
+            if op == "custom-call":
+                # Pallas kernels (opaque: no dots inside): modelled FLOPs
+                # from the per-kernel registry, matched via metadata op_name
+                cc_flops, matched = _custom_call_flops(rhs, shape_str,
+                                                       shapes)
+                if matched:
+                    local[cname]["flops"] += cc_flops
+                    local[cname]["cc_costed"] += 1
+                elif not _CALLS_RE.search(rhs):
+                    local[cname]["cc_uncosted"] += 1
 
             if op in ("dot", "convolution"):
                 out_elems = 1
@@ -219,10 +271,13 @@ def analyze_hlo(text: str) -> dict:
         if key in memo:
             return memo[key]
         memo[key] = {"flops": 0.0, "bytes": 0.0, "wire": 0.0,
+                     "cc_costed": 0.0, "cc_uncosted": 0.0,
                      "wire_by_kind": defaultdict(float),
                      "coll_counts": defaultdict(float)}  # cycle guard
         loc = local[c]
         acc = {"flops": loc["flops"],
+               "cc_costed": loc["cc_costed"],
+               "cc_uncosted": loc["cc_uncosted"],
                "bytes": 0.0 if flops_only else loc["bytes"],
                "wire": 0.0 if flops_only else loc["wire"],
                "wire_by_kind": defaultdict(
@@ -236,6 +291,8 @@ def analyze_hlo(text: str) -> dict:
             acc["flops"] += mult * sub["flops"]
             acc["bytes"] += mult * sub["bytes"]
             acc["wire"] += mult * sub["wire"]
+            acc["cc_costed"] += mult * sub["cc_costed"]
+            acc["cc_uncosted"] += mult * sub["cc_uncosted"]
             for k, v in sub["wire_by_kind"].items():
                 acc["wire_by_kind"][k] += mult * v
             for k, v in sub["coll_counts"].items():
@@ -252,4 +309,6 @@ def analyze_hlo(text: str) -> dict:
         "wire_bytes": result["wire"],
         "wire_by_kind": dict(result["wire_by_kind"]),
         "collective_counts": dict(result["coll_counts"]),
+        "custom_calls_costed": result["cc_costed"],
+        "custom_calls_uncosted": result["cc_uncosted"],
     }

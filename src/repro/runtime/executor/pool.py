@@ -44,13 +44,15 @@ class RoundHandle:
     toks: jax.Array               # [n_slots, 1] int32 (async)
     slots: tuple[tuple[int, Any], ...]
     t0: float
+    variant: str = "reference"    # compiled program dispatched (vstep)
 
 
 class SlotPoolExecutor:
     """Batched execution engine the continuous-batching scheduler drives."""
 
     def __init__(self, stepper, n_slots: int, *, overlap: bool = True,
-                 use_fused: bool | str = "auto", metrics=None, tracer=None):
+                 use_fused: bool | str = "auto", metrics=None, tracer=None,
+                 perf=None, profile: bool = False):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         self.stepper = stepper
@@ -59,6 +61,12 @@ class SlotPoolExecutor:
         self.overlap = bool(overlap)
         self.metrics = metrics
         self.tracer = tracer if tracer is not None else NULL_RECORDER
+        # obs.perf.PerfMonitor | None: roofline attribution at first
+        # harvest (+ after geometry changes), achieved rates every harvest
+        self.perf = perf
+        # wrap each dispatch in a jax.profiler step annotation so an
+        # enclosing jax.profiler.start_trace groups device work per round
+        self.profile = bool(profile)
         self.vstep = VStep(stepper, use_fused=use_fused)
         self.state = blank_state(stepper, self.n_slots)
         self.last_toks = jnp.zeros((self.n_slots, 1), jnp.int32)
@@ -115,8 +123,14 @@ class SlotPoolExecutor:
         t_host = time.perf_counter()
         for hook in self.round_hooks:
             hook(self, valid)
-        new_state, toks, _ = self.vstep.round(self.state, self.last_toks,
-                                              valid)
+        if self.profile:
+            with jax.profiler.StepTraceAnnotation(
+                    "decode_round", step_num=self.vstep.n_dispatches):
+                new_state, toks, _ = self.vstep.round(
+                    self.state, self.last_toks, valid)
+        else:
+            new_state, toks, _ = self.vstep.round(self.state,
+                                                  self.last_toks, valid)
         # state/toks advance at DISPATCH order: a later admit() writes its
         # row into this round's (async) output state, never a stale one.
         self.state, self.last_toks = new_state, toks
@@ -130,7 +144,7 @@ class SlotPoolExecutor:
                 dead=[int(i) for i in np.flatnonzero(
                     ~np.asarray(valid, bool))],
                 wall_args={"dispatch_host_ms": (t0 - t_host) * 1e3})
-        return RoundHandle(toks, occupants, t0)
+        return RoundHandle(toks, occupants, t0, self.vstep.last_variant)
 
     def _harvest(self, handle: RoundHandle | None
                  ) -> list[tuple[int, Any, int]]:
@@ -143,6 +157,9 @@ class SlotPoolExecutor:
             # dispatch->ready when harvesting synchronously; the pipelined
             # round period (host work hidden under device time) with overlap
             self.metrics.observe_round_ms((t_ready - handle.t0) * 1e3)
+        if self.perf is not None:
+            self.perf.observe_round(self, (t_ready - handle.t0) * 1e3,
+                                    handle.variant)
         if self.tracer.enabled:
             # overlap attribution: period = dispatch->ready wall span;
             # block = the device time NOT hidden by host work. Under

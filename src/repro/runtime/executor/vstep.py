@@ -65,6 +65,9 @@ class VStep:
         self.use_fused = bool(use_fused) and _fused_supported(stepper)
         self.n_traces = 0
         self.n_dispatches = 0
+        # which compiled program the LAST round() call dispatched — the
+        # perf monitor attributes each harvested round to its variant
+        self.last_variant = "reference"
 
         # closures read stepper.model at TRACE time: a planner-driven
         # set_code_r swaps the coded context, its new parity shapes key a
@@ -122,8 +125,10 @@ class VStep:
         self.n_dispatches += 1
         if self.use_fused and v is not None \
                 and int(st.n_shards - np.asarray(valid).sum()) <= 1:
+            self.last_variant = "fused"
             w_shards, parity_w = self._head_shards()
             new_state, nxt = self._round_fused(st.params, state, toks, v,
                                                w_shards, parity_w)
             return new_state, nxt, None
+        self.last_variant = "reference"
         return self._round(st.params, state, toks, v)

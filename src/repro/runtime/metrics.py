@@ -172,6 +172,10 @@ class RuntimeMetrics:
         self.ttft_ms = Histogram(reservoir_size, seed=3)
         self.round_ms = Histogram(reservoir_size, seed=4)  # MEASURED rounds
         self.queue_depth = QueueDepthStats()
+        # roofline-anchored perf gauges (obs.perf merges static attribution
+        # + per-round achieved rates here; empty when perf accounting is
+        # off) — exported via prometheus_text as repro_perf_* gauges
+        self.perf: dict = {}
         self.plan_log: deque[dict] = deque(maxlen=self.PLAN_LOG_BOUND)
         self.start_ms: float | None = None
         self.end_ms: float | None = None
@@ -206,6 +210,10 @@ class RuntimeMetrics:
     def sample_queue_depth(self, t_ms: float, depth: int):
         self.queue_depth.sample(t_ms, depth)
 
+    def set_perf(self, values: dict):
+        """Merge perf-attribution gauges (latest-value semantics)."""
+        self.perf.update(values)
+
     def observe_plan(self, plan: dict, applied: bool):
         """One adaptive-redundancy planner decision (window boundary)."""
         self.plan_log.append({"applied": bool(applied), **plan})
@@ -239,6 +247,7 @@ class RuntimeMetrics:
             "ttft": self.ttft_ms.dist(),
             "round_latency_measured": self.round_ms.dist(),
             "queue_depth": self.queue_depth.snapshot(),
+            "perf": dict(self.perf),
             "planner": {
                 "n_plans": len(self.plan_log),
                 "r_series": [[p["t_ms"], p["r"]] for p in self.plan_log],

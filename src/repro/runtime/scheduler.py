@@ -67,6 +67,8 @@ class RuntimeConfig:
     use_fused: bool | str = "auto"   # full-Pallas round: fused in-body
     #                                  coded GEMM+decode kernels + fused head
     max_queue_depth: int | None = None   # shed beyond this depth
+    perf: bool = False               # roofline attribution + achieved rates
+    profile: bool = False            # jax.profiler step annotations per round
 
     def __post_init__(self):
         if self.n_slots < 1:
@@ -140,10 +142,16 @@ class ContinuousBatchingScheduler:
             batched = supports_slot_batching(stepper.model)
         self.executor: SlotPoolExecutor | None = None
         if batched:
+            perf = None
+            if rcfg.perf:
+                # roofline-anchored round attribution: costed at first
+                # harvest, achieved rates + counter-track events per round
+                from repro.obs.perf import PerfMonitor
+                perf = PerfMonitor(metrics=self.metrics, tracer=self.tracer)
             self.executor = SlotPoolExecutor(
                 stepper, rcfg.n_slots, overlap=rcfg.overlap,
                 use_fused=rcfg.use_fused, metrics=self.metrics,
-                tracer=self.tracer)
+                tracer=self.tracer, perf=perf, profile=rcfg.profile)
 
     # --------------------------------------------------------- ingestion ----
     def submit(self, prompt, max_new_tokens: int,
