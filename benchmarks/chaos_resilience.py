@@ -85,7 +85,12 @@ def _run(stepper, workload, trace, *, seed: int, adapt: bool = False,
     if sched.executor is not None and sched.executor.perf is not None:
         perf_summary = sched.executor.perf.summary(
             snap["round_latency_measured"].get("p50_ms"))
+    slo = None
+    if sched.spans is not None:
+        from repro.obs.slo import summarize
+        slo = summarize(sched.spans)
     return {
+        "slo": slo,
         "completed_all": (snap["counters"]["requests_completed"]
                           == snap["counters"]["requests_submitted"]
                           == len(workload)),
@@ -104,6 +109,30 @@ def _run(stepper, workload, trace, *, seed: int, adapt: bool = False,
 
 # ------------------------------------------------------------- sections ----
 
+def _slo_inflation(clean: dict | None, faulty: dict | None) -> dict | None:
+    """Faulty-over-fault-free tail ratios from two span-derived SLO
+    summaries (``repro.obs.slo.summarize``), plus the faulty run's p99
+    fault-recovery sim-ms — the span tree's direct answer to "how much of
+    the tail is the faults' fault"."""
+    if not clean or not faulty:
+        return None
+
+    def ratio(key):
+        c, f = clean.get(key), faulty.get(key)
+        if c is None or f is None or c <= 0:
+            return None
+        return f / c
+
+    return {
+        "ttft_p99_inflation": ratio("ttft_p99_ms"),
+        "tpot_p99_inflation": ratio("tpot_p99_ms"),
+        "fault_recovery_p99_ms":
+            faulty["decomp"]["fault_recovery"]["p99_ms"],
+        "n_missed_faulty": faulty["n_missed"],
+        "miss_by_cause_faulty": faulty["miss_by_cause"],
+    }
+
+
 def churn_section(cfg, args) -> dict:
     """In-budget churn: coded completes everything with identical tokens;
     uncoded survives the same trace only through 2MR requeues."""
@@ -120,17 +149,29 @@ def churn_section(cfg, args) -> dict:
     # resizes r, so attribution compiles once and stays valid
     faulty = _run(coded, workload, trace, seed=args.seed, perf=True)
     uncoded = _build_stepper(cfg, args.tp, args.code_r, False, max_len)
+    uncoded_baseline = _run(uncoded, workload, None, seed=args.seed)
     uncoded_faulty = _run(uncoded, workload, trace, seed=args.seed)
 
     out = {
         "trace_events": len(trace),
         "coded": {k: faulty[k] for k in
                   ("completed_all", "counters", "request_latency",
-                   "ttft", "shard_timeline", "perf")},
+                   "ttft", "shard_timeline", "perf", "slo")},
         "coded_tokens_match_fault_free":
             faulty["tokens"] == baseline["tokens"],
         "uncoded": {k: uncoded_faulty[k] for k in
-                    ("completed_all", "counters", "request_latency")},
+                    ("completed_all", "counters", "request_latency",
+                     "slo")},
+        # headline: fault-attributed tail inflation, coded vs uncoded —
+        # faulty-run TTFT/TPOT p99 over the same stepper's fault-free
+        # run, plus the p99 sim-ms each request spent in fault recovery.
+        # CDC absorbs in-budget erasures in-step, so the coded row should
+        # stay near 1.0 while the uncoded row pays the 2MR requeue tax.
+        "slo_inflation": {
+            "coded": _slo_inflation(baseline["slo"], faulty["slo"]),
+            "uncoded": _slo_inflation(uncoded_baseline["slo"],
+                                      uncoded_faulty["slo"]),
+        },
     }
     assert out["coded"]["completed_all"], "coded runtime lost a request"
     assert out["coded_tokens_match_fault_free"], \
@@ -240,9 +281,13 @@ def _write_outputs(args, report: dict):
     if args.history:
         from repro.obs.history import append_snapshot
         churn = report["churn"]["coded"]
+        slo = churn.get("slo") or {}
         metrics = {
             "p99_latency_ms": churn["request_latency"].get("p99_ms"),
             "ttft_p99_ms": churn["ttft"].get("p99_ms"),
+            # span-derived decode rate (sim ms/token): steady state + tail
+            "tpot_p50_ms": slo.get("tpot_p50_ms"),
+            "tpot_p99_ms": slo.get("tpot_p99_ms"),
             **report["perf"][args.arch],
         }
         snap = append_snapshot(args.history, bench="chaos_resilience",
@@ -259,11 +304,16 @@ def run() -> list[dict]:
     args.smoke = True
     rep = build_report(args)
     _write_outputs(args, rep)
+    infl = rep["churn"]["slo_inflation"]
     rows = [{"section": "churn",
              "completed_all": rep["churn"]["coded"]["completed_all"],
              "tokens_match": rep["churn"]["coded_tokens_match_fault_free"],
              "uncoded_requeues":
-                 rep["churn"]["uncoded"]["counters"]["requests_requeued"]}]
+                 rep["churn"]["uncoded"]["counters"]["requests_requeued"],
+             "coded_tpot_p99_inflation":
+                 (infl["coded"] or {}).get("tpot_p99_inflation"),
+             "uncoded_tpot_p99_inflation":
+                 (infl["uncoded"] or {}).get("tpot_p99_inflation")}]
     rows += [{"section": "parity_cost", **r}
              for r in rep["parity_cost"]["rows"]]
     rows.append({"section": "adaptive",

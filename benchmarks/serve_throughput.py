@@ -109,6 +109,11 @@ def run_mode(cfg, workload, *, coded: bool, tp: int, code_r: int,
         # achieved rates at the steady-state p50 round period (robust to
         # the first-round compile outlier)
         snap["perf"] = sched.executor.perf.summary(meas.get("p50_ms"))
+    if sched.spans is not None:
+        # request-level SLO decomposition (obs.slo over the span trees):
+        # TTFT/TPOT percentiles with per-phase breakdown + miss causes
+        from repro.obs.slo import summarize
+        snap["slo"] = summarize(sched.spans)
     if collect_tokens:
         snap["tokens"] = {str(r.rid): [int(t) for t in r.tokens]
                           for r in completed}
@@ -139,6 +144,8 @@ def executor_comparison(cfg, workload, common: dict) -> dict:
         }
         if "perf" in snap:
             out[name]["perf"] = snap["perf"]
+        if "slo" in snap:
+            out[name]["slo"] = snap["slo"]
     seq, bat = out["sequential"], out["batched"]
     if seq["rounds_per_s"] and bat["rounds_per_s"]:
         out["batched_speedup"] = bat["rounds_per_s"] / seq["rounds_per_s"]
@@ -219,12 +226,16 @@ def zoo_executor_comparison(archs: list[str], smoke: bool, args,
 
 def append_history(path: str, arch: str, row: dict):
     """One schema-versioned trajectory snapshot for a per-arch bench row
-    (``repro.obs.history``): throughput + roofline attribution metrics."""
+    (``repro.obs.history``): throughput + roofline attribution + tail
+    latency (TTFT/TPOT from the span-tree SLO decomposition)."""
     from repro.obs.history import append_snapshot
+    slo = row.get("batched", {}).get("slo", {})
     metrics = {
         "rounds_per_s": row.get("batched", {}).get("rounds_per_s")
                         or row.get("rounds_per_s"),
         "ttft_p99_ms": row.get("batched", {}).get("ttft", {}).get("p99_ms"),
+        "tpot_p50_ms": slo.get("tpot_p50_ms"),
+        "tpot_p99_ms": slo.get("tpot_p99_ms"),
         **{k: row.get(k) for k in PERF_ROW_KEYS},
     }
     return append_snapshot(path, bench="serve_throughput", arch=arch,

@@ -66,11 +66,18 @@ class InjectedLatency:
         self.injector = injector
         self.rng = stream_rng(seed, "latency")
         self.last_round_ms: float = 0.0
+        # stall = last round's excess over its FAULT-FREE counterfactual
+        # (same base draw, no slowdowns, full mask): the deterministic
+        # per-round straggler/fault cost obs.spans charges to the `stall`
+        # span of every decode slice that rode the round
+        self.last_stall_ms: float = 0.0
 
     def _shard_times(self, now_ms: float, T: int, r: int,
-                     mask: np.ndarray | None) -> np.ndarray:
+                     mask: np.ndarray | None,
+                     base: np.ndarray | None = None) -> np.ndarray:
         """[T + r] per-responder times; dead responders are +inf."""
-        times = self.spec.base.sample(self.rng, (T + r,))
+        times = self.spec.base.sample(self.rng, (T + r,)) \
+            if base is None else base.copy()
         slow = self.injector.slowdown_at(now_ms)
         times[:T] *= slow[:T]
         if r and self.spec.parity_rides_data:
@@ -86,13 +93,23 @@ class InjectedLatency:
                  mask: np.ndarray | None = None) -> float:
         """Modelled latency of one coded (r > 0) or uncoded (r == 0)
         decode round at ``now_ms`` under the injected fault state."""
-        times = self._shard_times(now_ms, T, r, mask)
+        # ONE base draw per round (RNG consumption identical to before the
+        # stall accounting existed — replays stay bit-exact): the clean
+        # counterfactual reuses it with no slowdowns and a full mask.
+        base = self.spec.base.sample(self.rng, (T + r,))
+        if r:
+            clean = float(np.sort(base)[T - 1])
+        else:
+            clean = float(base[:T].max())
+        clean = min(clean, self.spec.timeout_ms)
+        times = self._shard_times(now_ms, T, r, mask, base=base)
         if r:
             dt = float(np.sort(times)[T - 1])   # T-th of the T+r arrivals
         else:
             dt = float(times[:T].max())         # wait for every data shard
         dt = min(dt, self.spec.timeout_ms)
         self.last_round_ms = dt
+        self.last_stall_ms = max(0.0, dt - clean)
         return dt
 
 

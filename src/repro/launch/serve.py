@@ -128,6 +128,11 @@ def main():
                     help="serve live Prometheus text metrics at "
                          "/metrics (and the trace at /trace) on this "
                          "port; 0 binds an ephemeral port")
+    ap.add_argument("--slo-report", action="store_true",
+                    help="print the per-request SLO breakdown after the "
+                         "run: p50/p99 TTFT/TPOT decomposition tables and "
+                         "deadline-miss attribution (same renderer as "
+                         "python -m repro.obs.slo report)")
     ap.add_argument("--perf", action="store_true",
                     help="roofline-anchored round attribution: useful vs "
                          "parity FLOPs, live coded_overhead_frac, achieved "
@@ -177,7 +182,8 @@ def main():
     server = None
     if args.metrics_port is not None:
         server = MetricsServer(sched.metrics, sched.shardlog, tracer,
-                               sched.clock, port=args.metrics_port).start()
+                               sched.clock, port=args.metrics_port,
+                               spans=sched.spans).start()
         print(f"metrics: http://127.0.0.1:{server.port}/metrics "
               f"(live trace: /trace)")
     if injector is not None:
@@ -246,16 +252,25 @@ def main():
         series = [(p["t_ms"], p["r"]) for p in sched.metrics.plan_log]
         print(f"planner: r series {series} "
               f"(replans: {sched.metrics.counters['replans']})")
+    if args.slo_report and sched.spans is not None:
+        from repro.obs.slo import decompositions, render_report
+        print("--- slo report " + "-" * 49)
+        print(render_report(decompositions(sched.spans)))
+        print("-" * 64)
     if args.trace:
         trace = write_chrome_trace(
             args.trace, tracer, sched.shardlog, now_ms=sched.clock.now(),
             meta={"arch": args.arch, "seed": args.seed,
-                  "chaos": args.chaos or "", "adapt_r": args.adapt_r})
-        stats = validate_chrome_trace(trace)
+                  "chaos": args.chaos or "", "adapt_r": args.adapt_r},
+            spans=sched.spans)
+        stats = validate_chrome_trace(
+            trace, require_span_closure=sched.spans is not None
+            and len(sched.spans.done) > 0)
         print(f"trace: wrote {args.trace} ({stats['n_events']} events on "
               f"{stats['n_tracks']} tracks; "
               f"{stats['n_injected_erasures']} injected erasures, all "
-              f"linked to a resolution)")
+              f"linked to a resolution; {stats['n_span_trees']} request "
+              f"span trees closed and gap-accounted)")
     if server is not None:
         server.stop()
     print(sched.metrics.to_json())

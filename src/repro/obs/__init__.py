@@ -16,7 +16,13 @@ Three pieces, wired through the whole serving stack:
     parity FLOPs, live ``coded_overhead_frac``) and achieved-vs-roofline
     utilization from the measured round latency;
   * ``history`` — schema-versioned benchmark-trajectory snapshots
-    (``BENCH_history.jsonl``) with a direction-aware regression gate.
+    (``BENCH_history.jsonl``) with a direction-aware regression gate;
+  * ``spans`` — per-request span trees (queue_wait -> prefill -> decode
+    slices + stall -> fault_recovery), SimClock-primary, wall-clock
+    quarantined, gap-free over every request lifetime;
+  * ``slo`` — TTFT/TPOT decompositions over those trees, deadline-miss
+    cause attribution, ``repro_slo_*`` exposition, and the
+    ``python -m repro.obs.slo report`` breakdown CLI.
 """
 from repro.obs.export import (MetricsServer, chrome_trace, prometheus_text,
                               validate_chrome_trace, write_chrome_trace)
@@ -25,6 +31,8 @@ from repro.obs.history import (DEFAULT_TOLERANCES, append_snapshot,
                                make_snapshot)
 from repro.obs.perf import PerfMonitor, RoundCost, attribute_round_costs
 from repro.obs.shardlog import ShardTimeline
+from repro.obs.slo import CAUSES, attribute, decompose, summarize
+from repro.obs.spans import SPAN_NAMES, RequestTree, Span, SpanTracker
 from repro.obs.tracer import (EVENT_KINDS, NULL_RECORDER, FlightRecorder,
                               TraceEvent)
 
@@ -36,4 +44,6 @@ __all__ = [
     "PerfMonitor", "RoundCost", "attribute_round_costs",
     "DEFAULT_TOLERANCES", "append_snapshot", "check_history", "compare",
     "load_history", "make_snapshot",
+    "SPAN_NAMES", "Span", "RequestTree", "SpanTracker",
+    "CAUSES", "attribute", "decompose", "summarize",
 ]

@@ -41,25 +41,33 @@ _KNOWN_PHASES = {"X", "i", "I", "M", "b", "e", "n", "s", "t", "f", "C"}
 # ---------------------------------------------------------- chrome trace ----
 
 def _track_order(tracks: list[str]) -> list[str]:
-    """Stable display order: requests, rounds, planner, perf, slots,
-    shards."""
+    """Stable display order: requests, spans, rounds, planner, perf,
+    slots, shards."""
     def key(t: str):
         head, _, idx = t.partition(":")
-        fixed = {"requests": 0, "rounds": 1, "planner": 2, "perf": 3,
-                 "slot": 4, "shard": 5}
-        return (fixed.get(head, 6), int(idx) if idx.isdigit() else 0, t)
+        fixed = {"requests": 0, "spans": 1, "rounds": 2, "planner": 3,
+                 "perf": 4, "slot": 5, "shard": 6}
+        return (fixed.get(head, 7), int(idx) if idx.isdigit() else 0, t)
     return sorted(set(tracks), key=key)
 
 
 def chrome_trace(recorder: FlightRecorder, shardlog=None,
                  now_ms: float | None = None,
-                 meta: dict | None = None) -> dict:
-    """Serialise the recorder (and optional shard timeline) as a Chrome
-    ``trace_event`` JSON object."""
+                 meta: dict | None = None, spans=None) -> dict:
+    """Serialise the recorder (and optional shard timeline and
+    ``SpanTracker``) as a Chrome ``trace_event`` JSON object. Terminal
+    request span trees render as async b/e events on a dedicated
+    ``spans`` track, with flow arrows ("s"/"f" pairs) from each round's
+    dispatch event to the decode slices that rode it and from each
+    injected fault's position to the ``fault_recovery`` span it caused;
+    each root span's end event embeds the ``obs.slo`` decomposition, so
+    the trace file is a self-contained SLO report."""
     events = recorder.events()
     tracks = [e.track for e in events]
     if shardlog is not None:
         tracks += [f"shard:{i}" for i in range(shardlog.n_shards)]
+    if spans is not None and len(spans.done):
+        tracks += ["spans", "rounds"]
     order = _track_order(tracks)
     tid = {t: i + 1 for i, t in enumerate(order)}
 
@@ -110,6 +118,9 @@ def chrome_trace(recorder: FlightRecorder, shardlog=None,
                 "args": {"shard": shard, "healed_by": cause},
             })
 
+    if spans is not None and len(spans.done):
+        _emit_span_events(out, spans, tid, events)
+
     return {
         "traceEvents": out,
         "displayTimeUnit": "ms",
@@ -123,10 +134,73 @@ def chrome_trace(recorder: FlightRecorder, shardlog=None,
     }
 
 
+def _span_args(sp) -> dict:
+    """Span args with the wall-clock fields folded in under ``wall_*``
+    keys (same quarantine convention as ``TraceEvent`` export)."""
+    args = dict(sp.args)
+    args["wall_t0_ms"] = sp.wall_t0_ms
+    for k, v in sp.wall_args.items():
+        args[f"wall_{k}"] = v
+    return args
+
+
+def _emit_span_events(out: list, spans, tid: dict, events) -> None:
+    """Render terminal request span trees as async b/e events plus the
+    two flow-arrow families (round -> decode slice, injected fault ->
+    fault_recovery span)."""
+    from repro.obs.slo import decompose
+    from repro.obs.spans import SPAN_FAULT_RECOVERY, SPAN_SLICE
+
+    span_tid = tid["spans"]
+    rounds_tid = tid.get("rounds", span_tid)
+    # anchor lookup: dispatch id -> its round.dispatch event's sim ts
+    round_ts = {e.args["round"]: e.t_ms * 1e3 for e in events
+                if e.kind == "round.dispatch" and "round" in e.args}
+
+    def emit(sp, rid):
+        rec = {"name": sp.name, "cat": "span", "ph": "b", "pid": 1,
+               "tid": span_tid, "id": str(rid), "ts": sp.t0_ms * 1e3,
+               "args": _span_args(sp)}
+        out.append(rec)
+        if sp.name == SPAN_SLICE and "round" in sp.args:
+            ridx = sp.args["round"]
+            flow = {"name": "rode-round", "cat": "flow", "pid": 1,
+                    "id": f"round{ridx}:rid{rid}"}
+            out.append({**flow, "ph": "s", "tid": rounds_tid,
+                        "ts": round_ts.get(ridx, sp.t0_ms * 1e3)})
+            out.append({**flow, "ph": "f", "bp": "e", "tid": span_tid,
+                        "ts": sp.t0_ms * 1e3})
+        if sp.name == SPAN_FAULT_RECOVERY and "fault_t_ms" in sp.args:
+            flow_id = (f"fault:s{sp.args.get('fault_shard', -1)}"
+                       f"@{sp.args['fault_t_ms']}:rid{rid}")
+            rec["args"]["flow_id"] = flow_id
+            anchor = tid.get(f"shard:{sp.args.get('fault_shard')}",
+                             rounds_tid)
+            flow = {"name": "caused-requeue", "cat": "flow", "pid": 1,
+                    "id": flow_id}
+            out.append({**flow, "ph": "s", "tid": anchor,
+                        "ts": sp.args["fault_t_ms"] * 1e3})
+            out.append({**flow, "ph": "f", "bp": "e", "tid": span_tid,
+                        "ts": sp.t0_ms * 1e3})
+        for child in sp.children:
+            emit(child, rid)
+        end = {"name": sp.name, "cat": "span", "ph": "e", "pid": 1,
+               "tid": span_tid, "id": str(rid), "ts": sp.t1_ms * 1e3,
+               "args": {}}
+        if sp.name == "request":
+            # the trace is a self-contained SLO report: the CLI
+            # (python -m repro.obs.slo report) reads these back
+            end["args"]["slo"] = decompose(tree)
+        out.append(end)
+
+    for tree in spans.terminal():
+        emit(tree.root, tree.rid)
+
+
 def write_chrome_trace(path: str, recorder: FlightRecorder, shardlog=None,
                        now_ms: float | None = None,
-                       meta: dict | None = None) -> dict:
-    trace = chrome_trace(recorder, shardlog, now_ms, meta)
+                       meta: dict | None = None, spans=None) -> dict:
+    trace = chrome_trace(recorder, shardlog, now_ms, meta, spans=spans)
     with open(path, "w") as f:
         json.dump(trace, f, indent=1, sort_keys=True)
     return trace
@@ -135,7 +209,8 @@ def write_chrome_trace(path: str, recorder: FlightRecorder, shardlog=None,
 # ------------------------------------------------------------ validation ----
 
 def validate_chrome_trace(trace: Any, require_fault_links: bool = False,
-                          require_perf_counters: bool = False) -> dict:
+                          require_perf_counters: bool = False,
+                          require_span_closure: bool = False) -> dict:
     """Structural + causal validation; raises ``ValueError`` on the first
     violation, returns summary stats otherwise. With
     ``require_fault_links=True`` the trace must contain at least one
@@ -143,7 +218,14 @@ def validate_chrome_trace(trace: Any, require_fault_links: bool = False,
     resolution (the CI chaos artifact contract). With
     ``require_perf_counters=True`` it must carry at least one counter
     ("C") sample on the ``perf`` track (the perf-observability contract
-    for perf-enabled runs)."""
+    for perf-enabled runs). With ``require_span_closure=True`` the trace
+    must carry at least one request span tree and EVERY tree must satisfy
+    the span contract — checked on any trace that has span events: every
+    b has a matching e (same async id + name, properly nested), top-level
+    phases tile the root gap-free, decode slices tile their decode span,
+    every deadline miss carries exactly one attributed cause, and every
+    ``fault_recovery`` span's flow arrow resolves to an s/f pair (0
+    unlinked)."""
     if not isinstance(trace, dict) or "traceEvents" not in trace:
         raise ValueError("trace must be a dict with a traceEvents list")
     events = trace["traceEvents"]
@@ -211,6 +293,7 @@ def validate_chrome_trace(trace: Any, require_fault_links: bool = False,
     if require_perf_counters and perf_counters == 0:
         raise ValueError("trace carries no counter samples on the 'perf' "
                          "track (require_perf_counters=True)")
+    span_stats = _validate_spans(events, require_span_closure)
     return {
         "n_events": sum(1 for e in events if e["ph"] != "M"),
         "n_tracks": len(names),
@@ -221,6 +304,134 @@ def validate_chrome_trace(trace: Any, require_fault_links: bool = False,
         "n_perf_counters": perf_counters,
         "dropped_events": trace.get("otherData", {}).get("dropped_events",
                                                          0),
+        **span_stats,
+    }
+
+
+#: tiling tolerance for span gap accounting, in trace_event µs
+_SPAN_EPS_US = 0.5
+
+
+def _validate_spans(events: list, require: bool) -> dict:
+    """The span contract (see ``validate_chrome_trace``): applied to any
+    trace carrying ``cat="span"`` async events; ``require=True``
+    additionally demands that span trees exist at all."""
+    from repro.obs.slo import CAUSES
+
+    trees: dict[str, list] = {}          # async id -> root nodes
+    stacks: dict[str, list] = {}
+    flow_ids = {e["id"] for e in events
+                if e.get("cat") == "flow" and e["ph"] in ("s", "t", "f")}
+    flow_starts = {e["id"] for e in events
+                   if e.get("cat") == "flow" and e["ph"] == "s"}
+    flow_ends = {e["id"] for e in events
+                 if e.get("cat") == "flow" and e["ph"] == "f"}
+    n_fr = n_unlinked_fr = 0
+    for i, e in enumerate(events):
+        if e.get("cat") != "span":
+            continue
+        if "id" not in e:
+            raise ValueError(f"span event {i} missing async id: {e}")
+        sid = e["id"]
+        if e["ph"] == "b":
+            node = {"name": e["name"], "ts": e["ts"], "t1": None,
+                    "args": e.get("args", {}), "children": []}
+            stack = stacks.setdefault(sid, [])
+            if stack:
+                stack[-1]["children"].append(node)
+            else:
+                trees.setdefault(sid, []).append(node)
+            stack.append(node)
+            if e["name"] == "fault_recovery":
+                n_fr += 1
+                fid = node["args"].get("flow_id")
+                if fid is None or fid not in flow_starts \
+                        or fid not in flow_ends:
+                    n_unlinked_fr += 1
+        elif e["ph"] == "e":
+            stack = stacks.get(sid)
+            if not stack:
+                raise ValueError(f"span end without open span (id={sid}, "
+                                 f"name={e['name']})")
+            node = stack.pop()
+            if node["name"] != e["name"]:
+                raise ValueError(
+                    f"span nesting violation for id={sid}: closing "
+                    f"{e['name']!r} but {node['name']!r} is open")
+            if e["ts"] < node["ts"]:
+                raise ValueError(f"span {e['name']!r} (id={sid}) closes "
+                                 "before it opens")
+            node["t1"] = e["ts"]
+            node["end_args"] = e.get("args", {})
+
+    for sid, stack in stacks.items():
+        if stack:
+            raise ValueError(
+                f"unclosed span(s) for id={sid}: "
+                f"{[n['name'] for n in stack]} (span contract requires "
+                "every request tree closed)")
+
+    n_missed = n_slices = n_roots = 0
+    for sid, roots in trees.items():
+        for root in roots:
+            if root["name"] != "request":
+                raise ValueError(f"top-level span {root['name']!r} "
+                                 f"(id={sid}) is not a request root")
+            n_roots += 1
+            # gap accounting: phases tile the root, slices tile decode
+            t = root["ts"]
+            for ph in root["children"]:
+                if abs(ph["ts"] - t) > _SPAN_EPS_US:
+                    raise ValueError(
+                        f"request {sid}: gap before {ph['name']!r} phase "
+                        f"({t} -> {ph['ts']} us)")
+                t = ph["t1"]
+                if ph["name"] == "decode":
+                    ts = ph["ts"]
+                    for sl in ph["children"]:
+                        if sl["name"] != "decode.round":
+                            raise ValueError(
+                                f"request {sid}: {sl['name']!r} directly "
+                                "under decode")
+                        if abs(sl["ts"] - ts) > _SPAN_EPS_US:
+                            raise ValueError(
+                                f"request {sid}: decode slice gap "
+                                f"({ts} -> {sl['ts']} us)")
+                        ts = sl["t1"]
+                        n_slices += 1
+                    if abs(ts - ph["t1"]) > _SPAN_EPS_US:
+                        raise ValueError(
+                            f"request {sid}: decode slices end at {ts}, "
+                            f"span at {ph['t1']} us")
+            if abs(t - root["t1"]) > _SPAN_EPS_US:
+                raise ValueError(
+                    f"request {sid}: phases end at {t}, root at "
+                    f"{root['t1']} us (gap in the span tree)")
+            slo = root.get("end_args", {}).get("slo")
+            if slo is not None and slo.get("missed"):
+                n_missed += 1
+                cause = slo.get("cause")
+                if cause not in CAUSES:
+                    raise ValueError(
+                        f"request {sid}: deadline miss with invalid "
+                        f"cause {cause!r} (must be one of {CAUSES})")
+
+    if require:
+        if n_roots == 0:
+            raise ValueError("trace carries no request span trees "
+                             "(require_span_closure=True)")
+        if n_unlinked_fr:
+            raise ValueError(
+                f"{n_unlinked_fr} fault_recovery span(s) lack a resolved "
+                "flow arrow to their injector fault "
+                "(require_span_closure=True)")
+    return {
+        "n_span_trees": n_roots,
+        "n_span_slices": n_slices,
+        "n_span_missed": n_missed,
+        "n_fault_recovery_spans": n_fr,
+        "n_unlinked_fault_recovery": n_unlinked_fr,
+        "n_flow_ids": len(flow_ids),
     }
 
 
@@ -239,17 +450,32 @@ def _prom_hist(lines: list[str], name: str, hist, help_: str):
 
 
 def prometheus_text(metrics, shardlog=None, now_ms: float | None = None,
-                    recorder: FlightRecorder | None = None) -> str:
+                    recorder: FlightRecorder | None = None,
+                    spans=None) -> str:
     """Render runtime metric state in the Prometheus text exposition
     format (0.0.4). ``metrics`` is a ``RuntimeMetrics``; the optional
-    shard timeline adds per-shard duty-cycle gauges and the recorder
-    adds trace-buffer meta-series."""
+    shard timeline adds per-shard duty-cycle gauges, the recorder adds
+    trace-buffer meta-series, and a ``SpanTracker`` adds the
+    ``repro_slo_*`` family (TTFT/TPOT percentiles, per-phase
+    decomposition, deadline misses by dominant cause)."""
     lines: list[str] = []
     lines.append("# HELP repro_runtime_counter Runtime lifecycle counters.")
     lines.append("# TYPE repro_runtime_counter counter")
     for k in sorted(metrics.counters):
         lines.append(f'repro_runtime_counter{{name="{k}"}} '
                      f"{metrics.counters[k]}")
+    lines.append("# HELP repro_requests_requeued_total Requests requeued "
+                 "by the 2MR beyond-budget fallback.")
+    lines.append("# TYPE repro_requests_requeued_total counter")
+    lines.append("repro_requests_requeued_total "
+                 f"{metrics.counters.get('requests_requeued', 0)}")
+    lines.append("# HELP repro_requests_shed_total Requests shed by the "
+                 "admission queue, by cause.")
+    lines.append("# TYPE repro_requests_shed_total counter")
+    shed_causes = getattr(metrics, "shed_causes", {}) or {}
+    for cause in sorted(set(shed_causes) | {"queue_full", "displaced"}):
+        lines.append(f'repro_requests_shed_total{{cause="{cause}"}} '
+                     f"{shed_causes.get(cause, 0)}")
     for name, hist, help_ in (
             ("repro_request_latency_ms", metrics.latencies_ms,
              "Submit-to-last-token request latency (sim ms)."),
@@ -295,6 +521,9 @@ def prometheus_text(metrics, shardlog=None, now_ms: float | None = None,
         lines.append("# TYPE repro_trace_events_total counter")
         lines.append(f"repro_trace_events_total {recorder.n_emitted}")
         lines.append(f"repro_trace_events_dropped_total {recorder.dropped}")
+    if spans is not None and len(spans.done):
+        from repro.obs.slo import prometheus_lines, summarize
+        lines.extend(prometheus_lines(summarize(spans)))
     return "\n".join(lines) + "\n"
 
 
@@ -305,7 +534,7 @@ class MetricsServer:
     port (tests); read it back from ``server.port``."""
 
     def __init__(self, metrics, shardlog=None, recorder=None, clock=None,
-                 port: int = 0, host: str = "127.0.0.1"):
+                 port: int = 0, host: str = "127.0.0.1", spans=None):
         outer = self
 
         class Handler(BaseHTTPRequestHandler):
@@ -335,6 +564,7 @@ class MetricsServer:
         self.shardlog = shardlog
         self.recorder = recorder
         self.clock = clock
+        self.spans = spans
         self._httpd = ThreadingHTTPServer((host, port), Handler)
         self._httpd.daemon_threads = True
         self._thread: threading.Thread | None = None
@@ -344,12 +574,13 @@ class MetricsServer:
 
     def render_metrics(self) -> str:
         return prometheus_text(self.metrics, self.shardlog, self._now(),
-                               self.recorder)
+                               self.recorder, spans=self.spans)
 
     def render_trace(self) -> dict:
         rec = self.recorder if self.recorder is not None \
             else FlightRecorder(capacity=1)
-        return chrome_trace(rec, self.shardlog, self._now())
+        return chrome_trace(rec, self.shardlog, self._now(),
+                            spans=self.spans)
 
     @property
     def port(self) -> int:

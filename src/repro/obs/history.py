@@ -56,6 +56,12 @@ DEFAULT_TOLERANCES: dict[str, tuple[str, float]] = {
     "roofline_utilization": ("higher", 0.50),
     "hbm_gbs": ("higher", 0.50),
     "ttft_p99_ms": ("lower", 0.50),
+    # TPOT (decode ms per generated token after the first, from the
+    # obs.slo span decomposition): sim-clock-derived, so tighter than the
+    # wall-clock latencies; p50 guards the steady decode rate, p99 the
+    # straggler tail
+    "tpot_p50_ms": ("lower", 0.35),
+    "tpot_p99_ms": ("lower", 0.50),
     "p99_latency_ms": ("lower", 0.50),
     "coded_overhead_frac": ("match", 0.05),
     "parity_device_equiv": ("match", 0.05),

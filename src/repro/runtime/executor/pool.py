@@ -45,6 +45,9 @@ class RoundHandle:
     slots: tuple[tuple[int, Any], ...]
     t0: float
     variant: str = "reference"    # compiled program dispatched (vstep)
+    round_idx: int = 0            # vstep dispatch id (matches the `round`
+    #                               arg of this round's round.dispatch
+    #                               event — the span flow-arrow anchor)
 
 
 class SlotPoolExecutor:
@@ -52,7 +55,7 @@ class SlotPoolExecutor:
 
     def __init__(self, stepper, n_slots: int, *, overlap: bool = True,
                  use_fused: bool | str = "auto", metrics=None, tracer=None,
-                 perf=None, profile: bool = False):
+                 perf=None, profile: bool = False, spans=None):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         self.stepper = stepper
@@ -64,6 +67,10 @@ class SlotPoolExecutor:
         # obs.perf.PerfMonitor | None: roofline attribution at first
         # harvest (+ after geometry changes), achieved rates every harvest
         self.perf = perf
+        # obs.spans.SpanTracker | None: each harvest stamps the MEASURED
+        # round period + unhidden block time onto the decode slices that
+        # rode the round (matched by RoundHandle.round_idx)
+        self.spans = spans
         # wrap each dispatch in a jax.profiler step annotation so an
         # enclosing jax.profiler.start_trace groups device work per round
         self.profile = bool(profile)
@@ -144,7 +151,8 @@ class SlotPoolExecutor:
                 dead=[int(i) for i in np.flatnonzero(
                     ~np.asarray(valid, bool))],
                 wall_args={"dispatch_host_ms": (t0 - t_host) * 1e3})
-        return RoundHandle(toks, occupants, t0, self.vstep.last_variant)
+        return RoundHandle(toks, occupants, t0, self.vstep.last_variant,
+                           round_idx=self.vstep.n_dispatches)
 
     def _harvest(self, handle: RoundHandle | None
                  ) -> list[tuple[int, Any, int]]:
@@ -160,13 +168,15 @@ class SlotPoolExecutor:
         if self.perf is not None:
             self.perf.observe_round(self, (t_ready - handle.t0) * 1e3,
                                     handle.variant)
+        # overlap attribution: period = dispatch->ready wall span;
+        # block = the device time NOT hidden by host work. Under
+        # overlap, period - block is the admission/eviction/queue work
+        # the pipeline successfully hid under device compute.
+        period = (t_ready - handle.t0) * 1e3
+        block = (t_ready - t_block) * 1e3
+        if self.spans is not None:
+            self.spans.on_round_wall(handle.round_idx, period, block)
         if self.tracer.enabled:
-            # overlap attribution: period = dispatch->ready wall span;
-            # block = the device time NOT hidden by host work. Under
-            # overlap, period - block is the admission/eviction/queue work
-            # the pipeline successfully hid under device compute.
-            period = (t_ready - handle.t0) * 1e3
-            block = (t_ready - t_block) * 1e3
             self.tracer.emit(
                 "round.harvest", track="rounds", overlap=self.overlap,
                 n_harvested=len(handle.slots),

@@ -176,6 +176,9 @@ class RuntimeMetrics:
         # + per-round achieved rates here; empty when perf accounting is
         # off) — exported via prometheus_text as repro_perf_* gauges
         self.perf: dict = {}
+        # per-cause shed breakdown (reason -> count); the total stays in
+        # counters["requests_shed"] so existing BENCH schemas are unchanged
+        self.shed_causes: dict[str, int] = {}
         self.plan_log: deque[dict] = deque(maxlen=self.PLAN_LOG_BOUND)
         self.start_ms: float | None = None
         self.end_ms: float | None = None
@@ -192,6 +195,12 @@ class RuntimeMetrics:
                 f"unknown counter {name!r}: register() it first "
                 f"(known: {sorted(self.counters)})")
         self.counters[name] += n
+
+    def count_shed(self, cause: str):
+        """One shed request, attributed to a cause (the admission queue's
+        ``shed_reason``). Keeps the aggregate counter in step."""
+        self.count("requests_shed")
+        self.shed_causes[cause] = self.shed_causes.get(cause, 0) + 1
 
     def observe_request(self, latency_ms: float, queueing_ms: float,
                         ttft_ms: float | None = None):
@@ -234,6 +243,7 @@ class RuntimeMetrics:
         elapsed_s = self.elapsed_ms / 1e3
         return {
             "counters": dict(self.counters),
+            "shed_causes": dict(self.shed_causes),
             "elapsed_ms": self.elapsed_ms,
             "throughput": {
                 "tokens_per_s": (self.counters["tokens_generated"] / elapsed_s

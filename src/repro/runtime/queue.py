@@ -33,10 +33,15 @@ def _protected(req: Request) -> bool:
 
 
 class AdmissionQueue:
-    def __init__(self, max_depth: int | None = None):
+    def __init__(self, max_depth: int | None = None, spans=None, clock=None):
         if max_depth is not None and max_depth < 1:
             raise ValueError(f"max_depth must be >= 1, got {max_depth}")
         self.max_depth = max_depth
+        # span emission point: shedding is the queue's decision, so the
+        # queue stamps the reason and terminates the victim's span tree
+        # (obs.spans.SpanTracker | None; clock supplies the sim stamp)
+        self.spans = spans
+        self.clock = clock
         self._q: list[tuple[tuple, Request]] = []    # sorted by key
 
     def __len__(self) -> int:
@@ -56,7 +61,14 @@ class AdmissionQueue:
             return None
         for i in range(len(self._q) - 1, -1, -1):
             if not _protected(self._q[i][1]):
-                return self._q.pop(i)[1]
+                victim = self._q.pop(i)[1]
+                victim.shed_reason = "queue_full" if victim is req \
+                    else "displaced"
+                if self.spans is not None:
+                    t = self.clock.now() if self.clock is not None \
+                        else victim.arrival_ms
+                    self.spans.on_shed(victim, t, victim.shed_reason)
+                return victim
         return None    # every entry is in-flight work put back by 2MR
 
     def pop(self) -> Request:

@@ -41,6 +41,11 @@ class Request:
     first_token_ms: float | None = None
     finished_ms: float | None = None
     n_requeues: int = 0
+    shed_reason: str | None = None      # stamped by the admission queue:
+    #                                     "queue_full" (arrived into a full
+    #                                     queue, sorted last) | "displaced"
+    #                                     (a better-ordered arrival pushed
+    #                                     it out)
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32)
@@ -82,6 +87,12 @@ class Request:
 
         CDC recovery never takes this path — it is the 2MR half of the
         hybrid policy, for failures beyond the code's erasure budget.
+
+        ``first_token_ms`` resets with the progress (TTFT then includes
+        the full requeue delay); span state resets with it — the
+        scheduler's ``SpanTracker.on_requeue`` closes the discarded
+        decode episode and opens a ``fault_recovery`` span at the same
+        instant, so the span tree and the stamps never disagree.
         """
         self.state = RequestState.QUEUED
         self.tokens = []

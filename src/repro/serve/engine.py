@@ -23,6 +23,7 @@ boundary, simulated with the measured per-shard latencies (core.failure).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any
 
 import jax
@@ -70,12 +71,19 @@ class ModelStepper:
         # exactly what keys a fresh jit trace
         self._decode = jax.jit(
             lambda p, st, tok, valid: self.model.decode(p, st, tok, valid))
+        # span emission points (obs.spans): MEASURED dispatch-side wall
+        # cost of the last prefill / parity re-encode. Wall-clock only —
+        # quarantined in span wall_args, never in the simulated timeline.
+        self.last_prefill_wall_ms: float = 0.0
+        self.last_reencode_wall_ms: float = 0.0
 
     # ------------------------------------------------------------ coding ----
     def reencode(self):
         """Offline parity re-encode (paper §5.1): run after a healed shard
         rejoins or a standby replica is swapped in."""
+        t0 = time.perf_counter()
         self.params = self.model.encode_offline(self._raw_params)
+        self.last_reencode_wall_ms = (time.perf_counter() - t0) * 1e3
 
     def set_code_r(self, code_r: int) -> bool:
         """Re-size the parity budget (adaptive redundancy): rebuild the
@@ -117,12 +125,14 @@ class ModelStepper:
         per_row=True builds the slot-batched cache layout (per-row position
         vectors) so the state can be written into a stacked executor batch.
         """
+        t0 = time.perf_counter()
         v = self._mask(valid) if self.coded else None
         b = batch["tokens"].shape[0]
         state = self.model.init_decode(self.params, batch, b, self.max_len,
                                        self.cache_dtype, valid=v,
                                        per_row=per_row)
         logits, state = self._decode(self.params, state, batch["tokens"], v)
+        self.last_prefill_wall_ms = (time.perf_counter() - t0) * 1e3
         return logits[:, -1:], state
 
     def decode_one(self, state, tok: jax.Array, valid=None
